@@ -1,0 +1,58 @@
+"""Framework execution overhead per Drop (paper Fig. 8).
+
+The paper's metric: wall-clock overhead per Drop (execution time minus
+payload time, divided by drop count), as graph size grows, for 1 island vs
+multiple islands.  Paper claim: < 10 us/drop at 400 nodes; multi-island
+roughly halves single-island overhead.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import Pipeline
+from repro.dsl import GraphBuilder
+
+
+def make_graph(width: int):
+    g = GraphBuilder(f"ov{width}")
+    g.data("src")
+    with g.scatter("sc", width):
+        g.component("w", app="noop", time=0.0)
+        g.data("d")
+        g.component("w2", app="noop", time=0.0)
+        g.data("d2")
+    with g.gather("ga", width):
+        g.component("r", app="noop", time=0.0)
+    g.data("out")
+    g.chain("src", "w", "d", "w2", "d2", "r", "out")
+    return g.graph()
+
+
+def run(widths=(100, 500, 2000), islands=(1, 2), nodes=4,
+        repeats: int = 2) -> List[Tuple[str, float, str]]:
+    rows = []
+    for width in widths:
+        for isl in islands:
+            best = float("inf")
+            drops = 0
+            for _ in range(repeats):
+                with Pipeline(num_nodes=nodes, num_islands=isl,
+                              workers_per_node=8,
+                              algorithm="none") as p:
+                    rep = p.run(make_graph(width), timeout=300)
+                    assert rep.ok, rep.errors[:2]
+                    drops = sum(rep.status_counts.values())
+                    best = min(best, rep.overhead_per_drop_us())
+            rows.append((f"overhead_us_per_drop[w={width},islands={isl}]",
+                         best, f"drops={drops}"))
+    return rows
+
+
+def main() -> None:
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

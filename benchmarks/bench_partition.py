@@ -1,0 +1,72 @@
+"""Partitioning quality: min_time vs min_res (paper §3.4 step 3).
+
+Reports, for a representative imaging-like graph: makespan and partition
+count for (a) no partitioning (every drop its own partition = all edges
+remote), (b) min_time, (c) min_res under a 2x-critical-path deadline.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import (critical_path, min_res, min_time, partition_stats,
+                        simulate_makespan, unroll)
+from repro.dsl import GraphBuilder
+
+
+def imaging_like_lg(days: int = 6, chans: int = 8):
+    """CHILES-shaped: scatter by day -> scatter by channel -> groupby chan
+    -> clean -> gather."""
+    g = GraphBuilder("imaging")
+    g.data("ms", volume=1e9)
+    with g.scatter("day", days):
+        g.component("split", app="noop", time=2.0)
+        with g.scatter("chan", chans):
+            g.data("chunk", volume=2e8)
+            g.component("subtract", app="noop", time=3.0)
+            g.data("sub", volume=2e8)
+    with g.group_by("bychan"):
+        g.component("clean", app="noop", time=5.0)
+        g.data("img", volume=4e7)
+    with g.gather("all", chans):
+        g.component("concat", app="noop", time=1.0)
+    g.data("cube", volume=3e8)
+    g.chain("ms", "split", "chunk", "subtract", "sub", "clean", "img",
+            "concat", "cube")
+    return g.graph()
+
+
+def run(dop: int = 8) -> List[Tuple[str, float, str]]:
+    rows = []
+    pgt = unroll(imaging_like_lg())
+    n = len(pgt)
+    for i, s in enumerate(pgt.drops.values()):
+        s.partition = i
+    base = simulate_makespan(pgt, dop)
+    rows.append((f"makespan_none[n={n}]", base * 1e6, "partitions=%d" % n))
+
+    pgt_t = unroll(imaging_like_lg())
+    rt = min_time(pgt_t, dop=dop)
+    st = partition_stats(pgt_t)
+    rows.append((f"makespan_min_time[n={n}]", rt.makespan * 1e6,
+                 f"partitions={rt.num_partitions};"
+                 f"cross_GB={st['cross_volume']/1e9:.2f};"
+                 f"speedup={base/max(rt.makespan,1e-9):.2f}x"))
+
+    pgt_r = unroll(imaging_like_lg())
+    deadline = critical_path(pgt_r, partitioned=False) * 2
+    rr = min_res(pgt_r, deadline=deadline, dop=dop)
+    sr = partition_stats(pgt_r)
+    rows.append((f"makespan_min_res[n={n}]", rr.makespan * 1e6,
+                 f"partitions={rr.num_partitions};"
+                 f"deadline={deadline*1e6:.0f};"
+                 f"meets={rr.makespan <= deadline * 1.000001}"))
+    return rows
+
+
+def main() -> None:
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

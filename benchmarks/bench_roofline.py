@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run artifacts (deliverable g source).
+
+Reads results/dryrun/*.json and prints per-cell terms.  ``python -m
+benchmarks.bench_roofline --markdown`` emits the EXPERIMENTS.md tables.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "single"):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("variant", "baseline") == "baseline":
+            rows.append(rec)
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    out = []
+    for rec in load("single"):
+        cell = f"{rec['arch']}/{rec['shape']}"
+        if rec["status"] != "ok":
+            out.append((f"roofline[{cell}]", 0.0, rec["status"]))
+            continue
+        r = rec["roofline"]
+        out.append((
+            f"roofline[{cell}]",
+            r["roofline_fraction"],
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3g};"
+            f"memory_s={r['memory_s']:.3g};"
+            f"collective_s={r['collective_s']:.3g};"
+            f"useful={r['useful_fraction']:.3f}"))
+    return out
+
+
+def markdown(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| roofline frac | MODEL/HLO flops | per-dev GB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        cell = f"{rec['arch']} | {rec['shape']}"
+        if rec["status"] == "skipped":
+            lines.append(f"| {cell} | — | — | — | skipped | — | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {cell} | — | — | — | ERROR | — | — | — | — |")
+            continue
+        r = rec["roofline"]
+        mem_gb = rec["memory"]["per_device_bytes"] / 1e9
+        lines.append(
+            f"| {cell} | {r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['dominant'].replace('_s','')} | "
+            f"{r['roofline_fraction']:.3f} | {r['useful_fraction']:.3f} | "
+            f"{mem_gb:.2f} | {rec.get('compile_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    if "--markdown" in sys.argv:
+        mesh = "multi" if "--multi" in sys.argv else "single"
+        print(markdown(mesh))
+        return
+    for name, val, extra in run():
+        print(f"{name},{val:.4f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

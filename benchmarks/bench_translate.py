@@ -1,0 +1,76 @@
+"""Translation cost: unroll + partition time vs logical-graph width (§3.4).
+
+The paper streams JSON and unrolls logical graphs into millions of drops;
+here we measure our unroll + min_time partitioning throughput
+(drops/second) as the physical graph grows.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import min_time, unroll
+from repro.core.graph_io import load_pgt, save_pgt
+from repro.dsl import GraphBuilder
+
+
+def make_lg(width: int, depth: int = 3):
+    g = GraphBuilder(f"tr{width}")
+    g.data("src")
+    with g.scatter("sc", width):
+        for i in range(depth):
+            g.component(f"w{i}", app="noop", time=0.001)
+            g.data(f"d{i}", volume=1e6)
+    g.connect("src", "w0")
+    for i in range(depth):
+        g.connect(f"w{i}", f"d{i}")
+        if i + 1 < depth:
+            g.connect(f"d{i}", f"w{i+1}")
+    return g.graph()
+
+
+def run(widths=(1000, 10000, 50000),
+        partition_widths=(500, 2000)) -> List[Tuple[str, float, str]]:
+    rows = []
+    for width in widths:
+        lg = make_lg(width)
+        t0 = time.monotonic()
+        pgt = unroll(lg)
+        t_unroll = time.monotonic() - t0
+        n = len(pgt)
+        rows.append((f"unroll_us_per_drop[n={n}]",
+                     1e6 * t_unroll / n, f"total_s={t_unroll:.3f}"))
+    for width in partition_widths:
+        pgt = unroll(make_lg(width))
+        n = len(pgt)
+        t1 = time.monotonic()
+        min_time(pgt, dop=8, max_trials=500)
+        t_part = time.monotonic() - t1
+        rows.append((f"partition_us_per_drop[n={n}]",
+                     1e6 * t_part / n,
+                     f"total_s={t_part:.3f};max_trials=500"))
+    # streaming (de)serialisation throughput (paper §3.7 ijson experiment)
+    pgt = unroll(make_lg(10000))
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.jsonl.gz")
+        t0 = time.monotonic()
+        save_pgt(pgt, path)
+        t_save = time.monotonic() - t0
+        t1 = time.monotonic()
+        load_pgt(path)
+        t_load = time.monotonic() - t1
+    rows.append((f"pgt_save_us_per_drop[n={len(pgt)}]",
+                 1e6 * t_save / len(pgt), f"total_s={t_save:.3f}"))
+    rows.append((f"pgt_load_us_per_drop[n={len(pgt)}]",
+                 1e6 * t_load / len(pgt), f"total_s={t_load:.3f}"))
+    return rows
+
+
+def main() -> None:
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measurement):
+  bench_overhead  — paper Fig. 8 (framework overhead/drop, 1 vs 2 islands)
+  bench_translate — paper §3.4/§3.7 (unroll + partition + stream-IO cost)
+  bench_partition — paper §3.4 step 3 (min_time vs min_res quality)
+  bench_kernels   — TPU kernels: residuals + VMEM working sets
+  bench_roofline  — dry-run roofline terms per (arch x shape), single pod
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_kernels, bench_overhead, bench_partition,
+                   bench_roofline, bench_translate)
+    modules = [
+        ("overhead", bench_overhead),
+        ("translate", bench_translate),
+        ("partition", bench_partition),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    failed = False
+    for name, mod in modules:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failed = True
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

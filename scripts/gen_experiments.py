@@ -1,0 +1,151 @@
+"""Assemble EXPERIMENTS.md from dry-run JSONs + logs.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+RESULTS = ROOT / "results" / "dryrun"
+
+from repro.models.common import SHAPES  # noqa: E402
+
+
+def load(mesh, variant=None):
+    rows = {}
+    for p in sorted(RESULTS.glob(f"*__{mesh}*.json")):
+        rec = json.loads(p.read_text())
+        if variant is None and rec.get("variant", "baseline") != "baseline":
+            continue
+        if variant is not None and rec.get("variant") != variant:
+            continue
+        rows[(rec["arch"], rec["shape"])] = rec
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(mesh):
+    rows = load(mesh)
+    lines = [
+        "| arch | shape | status | chips | compile s | per-dev GB (args+temp)"
+        " | HLO GFLOPs/dev | collective MB/dev (AG/AR/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape) in sorted(rows):
+        rec = rows[(arch, shape)]
+        if rec["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped (see DESIGN.md) "
+                         "| — | — | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | **ERROR** | — | — | — | — "
+                         f"| {rec.get('error','')[:60]} |")
+            continue
+        m = rec["memory"]
+        c = rec.get("collectives", {})
+        coll = "/".join(
+            f"{c.get(k, 0)/1e6:.0f}"
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+        flops = rec.get("cost", {}).get("flops", 0) / 1e9
+        lines.append(
+            f"| {arch} | {shape} | ok | {rec['chips']} "
+            f"| {rec.get('compile_s', 0):.0f} "
+            f"| {fmt_bytes(m.get('per_device_bytes', 0))} "
+            f"| {flops:,.0f} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    rows = load("single")
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| roofline frac | MODEL/HLO | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        ("moe", "train"): "shard experts (EP all-to-all) / sequence-parallel"
+                          " residual to kill the combine all-reduce",
+        ("moe", "prefill"): "fuse attention (flash kernel holds logits in "
+                            "VMEM); dispatch buffers in bf16",
+        ("dense", "train"): "fused attention + remat policy keeps logits/"
+                            "scores out of HBM",
+        ("dense", "prefill"): "flash attention kernel (scores never hit "
+                              "HBM)",
+        ("ssm", "train"): "use the whole mesh as DP (dp_all) — model axis "
+                          "idles; then SSD kernel keeps chunk tensors in "
+                          "VMEM",
+        ("hybrid", "train"): "same as ssm: dp_all; SSD kernel",
+        ("ssm", "decode"): "decode is weight-streaming bound: batch up / "
+                           "quantise weights",
+        ("hybrid", "decode"): "weight-streaming bound: batch up / quantise",
+    }
+    for (arch, shape) in sorted(rows):
+        rec = rows[(arch, shape)]
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        fam = rec["family"]
+        kind = rec["kind"]
+        note = notes.get((fam, kind),
+                         "batch 1 token/seq: weight+cache streaming bound — "
+                         "batch more sequences or quantise"
+                         if kind == "decode" else
+                         "fused attention + activation sharding")
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['roofline_fraction']:.3f} | {r['useful_fraction']:.3f} | "
+            f"{note} |")
+    return "\n".join(lines)
+
+
+def variant_rows(arch, shape, variants):
+    out = []
+    base = load("single").get((arch, shape))
+    rows = [("baseline", base)]
+    for v in variants:
+        rec = load("single", variant=v).get((arch, shape))
+        rows.append((v, rec))
+    for name, rec in rows:
+        if rec is None or rec.get("status") != "ok":
+            out.append(f"| {name} | — | — | — | — | — | (missing) |")
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        out.append(
+            f"| {name} | {r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['dominant'].replace('_s','')} | "
+            f"{r['useful_fraction']:.3f} | "
+            f"{fmt_bytes(m.get('per_device_bytes', 0))} GB |")
+    return "\n".join(out)
+
+
+def main():
+    tmpl = (ROOT / "scripts" / "experiments_template.md").read_text()
+    out = tmpl
+    out = out.replace("{{DRYRUN_SINGLE}}", dryrun_table("single"))
+    out = out.replace("{{DRYRUN_MULTI}}", dryrun_table("multi"))
+    out = out.replace("{{ROOFLINE}}", roofline_table())
+    out = out.replace("{{VAR_MAMBA}}", variant_rows(
+        "mamba2_1_3b", "train_4k",
+        ["dp_all", "dp_all+nm1", "dp_all+nm1+chunk128"]))
+    out = out.replace("{{VAR_GRANITE}}", variant_rows(
+        "granite_moe_3b_a800m", "train_4k",
+        ["sp", "dp_all+nm1", "dp_all+nm1+cf1.0",
+         "dp_all+nm1+cf1.0+pin"]))
+    out = out.replace("{{VAR_GROK}}", variant_rows(
+        "grok_1_314b", "train_4k", ["sp", "ep", "ep+nm4", "sp+nm4"]))
+    (ROOT / "EXPERIMENTS.md").write_text(out)
+    print("EXPERIMENTS.md written",
+          len(out.splitlines()), "lines")
+
+
+if __name__ == "__main__":
+    main()

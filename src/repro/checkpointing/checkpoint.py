@@ -1,0 +1,128 @@
+"""Sharded model/optimizer checkpointing with async writer.
+
+Format: one ``.npz`` per pytree leaf-group shard + a JSON manifest holding
+the treedef, shapes, dtypes and step.  Atomic via write-to-tmp + rename.
+The async path hands a host copy to a writer thread so the training loop
+never blocks on disk (the framework-level analogue of the paper's Drop
+persistence, §4: "manage Drops through persistent check-pointing,
+versioning and recovery after restart").
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return items, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    shards: int = 1) -> str:
+    """Blocking save.  ``shards``: split leaves round-robin into N files."""
+    d = Path(directory)
+    tmp = d / f".tmp-{step}-{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    items, _ = _flatten(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": [], "shards": shards}
+    buckets: List[Dict[str, np.ndarray]] = [dict() for _ in range(shards)]
+    for i, (name, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        key = f"leaf{i}"
+        buckets[i % shards][key] = arr
+        manifest["leaves"].append(
+            {"name": name, "key": key, "shard": i % shards,
+             "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    for s, bucket in enumerate(buckets):
+        np.savez(tmp / f"shard{s}.npz", **bucket)
+    with open(tmp / "manifest.json", "w") as fh:
+        json.dump(manifest, fh)
+    final = d / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return str(final)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.iterdir()
+             if p.is_dir() and p.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, tree_like: Any,
+                    step: Optional[int] = None) -> Tuple[int, Any]:
+    """Restore into the structure of ``tree_like`` (shapes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = Path(directory) / f"step_{step:08d}"
+    with open(d / "manifest.json") as fh:
+        manifest = json.load(fh)
+    shards = [np.load(d / f"shard{s}.npz")
+              for s in range(manifest["shards"])]
+    items, treedef = _flatten(tree_like)
+    assert len(items) == len(manifest["leaves"]), \
+        (len(items), len(manifest["leaves"]))
+    leaves = []
+    for (name, like), meta in zip(items, manifest["leaves"]):
+        arr = shards[meta["shard"]][meta["key"]]
+        assert list(np.shape(like)) == meta["shape"], \
+            f"{name}: {np.shape(like)} != {meta['shape']}"
+        leaves.append(arr)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Async, bounded-keep checkpointer."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: List[int] = []
+
+    def save_async(self, step: int, tree: Any) -> None:
+        host = jax.tree.map(np.asarray, tree)   # device->host copy now
+        self.wait()
+
+        def work() -> None:
+            save_checkpoint(self.directory, step, host)
+            self.saved_steps.append(step)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        d = Path(self.directory)
+        steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
+                       if p.is_dir() and p.name.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(d / f"step_{s:08d}", ignore_errors=True)
+
+    def restore_latest(self, tree_like: Any) -> Optional[Tuple[int, Any]]:
+        self.wait()
+        try:
+            return load_checkpoint(self.directory, tree_like)
+        except FileNotFoundError:
+            return None

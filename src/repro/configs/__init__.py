@@ -1,0 +1,105 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants.
+
+``get_config(name)`` returns the exact published config;
+``get_smoke_config(name)`` returns a tiny same-family variant for CPU tests;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for the
+dry-run (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import SHAPES, ArchConfig, ShapeConfig
+
+ARCH_NAMES = [
+    "whisper_large_v3",
+    "grok_1_314b",
+    "granite_moe_3b_a800m",
+    "nemotron_4_15b",
+    "gemma2_27b",
+    "codeqwen15_7b",
+    "command_r_plus_104b",
+    "zamba2_2_7b",
+    "mamba2_1_3b",
+    "chameleon_34b",
+]
+
+# public ids use dashes (``--arch whisper-large-v3``)
+def _mod_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f".{_mod_name(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f".{_mod_name(name)}", __package__)
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+# ---------------------------------------------------------------------------
+# Cell applicability (DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    """Returns None if runnable, else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("needs sub-quadratic attention; "
+                f"{cfg.name} is full-attention (see DESIGN.md)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — dry-run deliverable e.2)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                for_step: Optional[str] = None) -> Dict[str, Any]:
+    """Abstract inputs for the given (arch, shape) cell.
+
+    train/prefill: {tokens, labels?, frames?}
+    decode:        {tokens(B,1), pos, cache}
+    """
+    from ..models import model as M
+    B, S = shape.global_batch, shape.seq_len
+    kind = for_step or shape.kind
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "encdec":
+            enc_len = max(S // cfg.encoder_ratio, 1)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }
+
+
+def abstract_params(cfg: ArchConfig) -> Any:
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    from ..models import model as M
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,39 @@
+"""DALiuGE-style graph execution core (the paper's contribution).
+
+Public surface: Drops, constructs, logical graphs, translation
+(unroll+partition), mapping, managers, sessions, the engine facade,
+fault handling and data lifecycle management.
+"""
+from .constructs import Construct, Kind, LogicalEdge
+from .drop import (AppDrop, AppState, DataDrop, Drop, DropState, FilePayload,
+                   MemoryPayload, NullPayload, Payload, PayloadError)
+from .engine import ExecutionReport, Pipeline
+from .events import Event, EventBus, RecordingListener
+from .fault import FaultManager, StragglerWatcher, elastic_remap, with_retries
+from .graph_io import iter_pgt, load_lgt, load_pgt, save_lgt, save_pgt
+from .lifecycle import DataLifecycleManager
+from .logical import (GraphValidationError, LogicalGraph,
+                      LogicalGraphTemplate)
+from .managers import (DataIslandDropManager, MasterDropManager,
+                       NodeDropManager, get_app, make_cluster, register_app)
+from .mapping import NodeInfo, map_partitions
+from .partition import PartitionResult, min_res, min_time
+from .schedule import critical_path, partition_stats, simulate_makespan
+from .session import Session, SessionState
+from .unroll import Axis, DropSpec, PhysicalGraphTemplate, leaf_axes, unroll
+
+__all__ = [
+    "AppDrop", "AppState", "Axis", "Construct", "DataDrop",
+    "DataIslandDropManager", "DataLifecycleManager", "Drop", "DropSpec",
+    "DropState", "Event", "EventBus", "ExecutionReport", "FaultManager",
+    "FilePayload", "GraphValidationError", "Kind", "LogicalEdge",
+    "LogicalGraph", "LogicalGraphTemplate", "MasterDropManager",
+    "MemoryPayload", "NodeDropManager", "NodeInfo", "NullPayload",
+    "PartitionResult", "Payload", "PayloadError", "PhysicalGraphTemplate",
+    "Pipeline", "RecordingListener", "Session", "SessionState",
+    "StragglerWatcher", "critical_path", "elastic_remap", "get_app",
+    "iter_pgt", "leaf_axes", "load_lgt", "load_pgt", "make_cluster",
+    "map_partitions", "min_res", "min_time", "partition_stats",
+    "register_app", "save_lgt", "save_pgt", "simulate_makespan", "unroll",
+    "with_retries",
+]

@@ -1,0 +1,153 @@
+"""Engine facade — the six-stage pipeline in one object (paper Fig. 1).
+
+``Pipeline`` wires the stages together:
+
+  compose (LGT) -> parametrise (LG) -> translate (unroll+partition, PGT)
+  -> deploy (map+managers, PG) -> execute (data-activated cascade)
+
+Each stage is independently accessible (the separation of concerns the paper
+insists on); this facade is what examples, the training launcher and the
+benchmarks use.
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from . import partition as partition_mod
+from .fault import FaultManager, StragglerWatcher
+from .lifecycle import DataLifecycleManager
+from .logical import LogicalGraph, LogicalGraphTemplate
+from .managers import MasterDropManager, make_cluster
+from .mapping import NodeInfo, map_partitions
+from .session import Session, SessionState
+from .unroll import PhysicalGraphTemplate, unroll
+
+
+@dataclass
+class ExecutionReport:
+    session_id: str
+    state: str
+    status_counts: Dict[str, int]
+    wall_time: float
+    events_published: int
+    errors: List[str] = field(default_factory=list)
+    speculative_wins: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return (self.state == SessionState.FINISHED.value
+                and not self.errors)
+
+    def overhead_per_drop_us(self, payload_time: float = 0.0) -> float:
+        n = sum(self.status_counts.values())
+        return 1e6 * max(self.wall_time - payload_time, 0.0) / max(n, 1)
+
+
+class Pipeline:
+    """End-to-end driver for one logical graph on one cluster."""
+
+    def __init__(self, num_nodes: int = 2, num_islands: int = 1,
+                 workers_per_node: int = 4, dop: int = 8,
+                 algorithm: str = "min_time",
+                 deadline: Optional[float] = None,
+                 enable_dlm: bool = False,
+                 enable_stragglers: bool = False) -> None:
+        self.master, self.nodes = make_cluster(
+            num_nodes, num_islands, workers_per_node)
+        self.dop = dop
+        self.algorithm = algorithm
+        self.deadline = deadline
+        self.enable_dlm = enable_dlm
+        self.enable_stragglers = enable_stragglers
+        self.pgt: Optional[PhysicalGraphTemplate] = None
+        self.session: Optional[Session] = None
+        self.fault_manager: Optional[FaultManager] = None
+        self.translate_time = 0.0
+        self.deploy_time = 0.0
+
+    # -- stage 4: translate ---------------------------------------------------
+    def translate(self, lg: LogicalGraph) -> PhysicalGraphTemplate:
+        t0 = time.monotonic()
+        pgt = unroll(lg)
+        if self.algorithm == "min_time":
+            partition_mod.min_time(pgt, dop=self.dop)
+        elif self.algorithm == "min_res":
+            dl = self.deadline if self.deadline is not None else float("inf")
+            partition_mod.min_res(pgt, deadline=dl, dop=self.dop)
+        elif self.algorithm == "none":
+            for i, spec in enumerate(pgt.drops.values()):
+                spec.partition = i
+        else:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        self.translate_time = time.monotonic() - t0
+        self.pgt = pgt
+        return pgt
+
+    # -- stage 5: deploy ---------------------------------------------------------
+    def deploy(self, pgt: Optional[PhysicalGraphTemplate] = None,
+               session_id: Optional[str] = None) -> Session:
+        pgt = pgt or self.pgt
+        assert pgt is not None, "translate() first"
+        t0 = time.monotonic()
+        map_partitions(pgt, self.nodes)
+        session = self.master.create_session(
+            session_id or f"s-{uuid.uuid4().hex[:8]}")
+        self.master.deploy(session, pgt)
+        self.deploy_time = time.monotonic() - t0
+        self.session = session
+        self.fault_manager = FaultManager(session, pgt, self.master)
+        return session
+
+    # -- stage 6: execute ----------------------------------------------------------
+    def execute(self, timeout: float = 60.0,
+                inputs: Optional[Dict[str, Any]] = None) -> ExecutionReport:
+        assert self.session is not None, "deploy() first"
+        session = self.session
+        if inputs:
+            from .drop import DataDrop
+            for uid, value in inputs.items():
+                d = session.drops[uid]
+                assert isinstance(d, DataDrop)
+                d.write(value)
+        dlm = DataLifecycleManager(session).start() if self.enable_dlm \
+            else None
+        watcher = (StragglerWatcher(session, self.master).start()
+                   if self.enable_stragglers else None)
+        t0 = time.monotonic()
+        session.start()
+        finished = session.wait(timeout)
+        wall = time.monotonic() - t0
+        if watcher:
+            watcher.stop()
+        if dlm:
+            dlm.stop()
+        errs = [f"{d.uid}: {(d.error_info or '')[:200]}"
+                for d in session.errors()]
+        return ExecutionReport(
+            session_id=session.session_id,
+            state=(session.state.value if finished else "TIMEOUT"),
+            status_counts=session.status(),
+            wall_time=wall,
+            events_published=session.bus.published,
+            errors=errs,
+            speculative_wins=watcher.wins if watcher else 0,
+        )
+
+    # -- convenience: run everything -----------------------------------------------
+    def run(self, lg: LogicalGraph, timeout: float = 60.0,
+            inputs: Optional[Dict[str, Any]] = None) -> ExecutionReport:
+        self.translate(lg)
+        self.deploy()
+        return self.execute(timeout=timeout, inputs=inputs)
+
+    def shutdown(self) -> None:
+        self.master.shutdown()
+
+    def __enter__(self) -> "Pipeline":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()

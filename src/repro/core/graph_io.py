@@ -1,0 +1,109 @@
+"""Graph (de)serialisation (paper §3.7).
+
+"We currently use JSON as the serialization format for the different graphs.
+JSON-encoded graphs are compressed and uncompressed on-the-fly when
+transmitted.  We parse the JSON content iteratively to keep memory low for
+big graphs."
+
+We mirror that: gzip-compressed JSON for LGTs and PGTs, with an incremental
+(chunked) writer/reader for physical graphs so multi-million-drop graphs never
+need a single monolithic in-memory string (the paper's ijson adaptation).
+"""
+from __future__ import annotations
+
+import gzip
+import json
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from .logical import LogicalGraph, LogicalGraphTemplate
+from .unroll import DropSpec, PhysicalGraphTemplate
+
+
+# -- logical graphs -----------------------------------------------------------
+
+
+def save_lgt(lgt: LogicalGraphTemplate, path: str) -> None:
+    raw = json.dumps(lgt.to_json()).encode()
+    with gzip.open(path, "wb") as fh:
+        fh.write(raw)
+
+
+def load_lgt(path: str) -> LogicalGraphTemplate:
+    with gzip.open(path, "rb") as fh:
+        return LogicalGraphTemplate.from_json(json.loads(fh.read()))
+
+
+# -- physical graphs: incremental JSONL-in-gzip ---------------------------------
+
+
+def _spec_to_json(s: DropSpec) -> Dict[str, Any]:
+    return {
+        "uid": s.uid, "kind": s.kind, "construct": s.construct,
+        "oid": list(s.oid), "app": s.app, "payload_kind": s.payload_kind,
+        "execution_time": s.execution_time, "data_volume": s.data_volume,
+        "error_threshold": s.error_threshold, "params": s.params,
+        "partition": s.partition, "node": s.node,
+    }
+
+
+def _spec_from_json(d: Dict[str, Any]) -> DropSpec:
+    d = dict(d)
+    d["oid"] = tuple(d["oid"])
+    return DropSpec(**d)
+
+
+def save_pgt(pgt: PhysicalGraphTemplate, path: str,
+             chunk: int = 10000) -> None:
+    """Stream the PGT out as gzip JSONL: header, then drops, then edges."""
+    with gzip.open(path, "wt") as fh:
+        fh.write(json.dumps({"type": "header", "name": pgt.name,
+                             "num_drops": len(pgt.drops),
+                             "num_edges": len(pgt.edges)}) + "\n")
+        buf: List[Dict[str, Any]] = []
+        for spec in pgt.drops.values():
+            buf.append(_spec_to_json(spec))
+            if len(buf) >= chunk:
+                fh.write(json.dumps({"type": "drops", "items": buf}) + "\n")
+                buf = []
+        if buf:
+            fh.write(json.dumps({"type": "drops", "items": buf}) + "\n")
+        ebuf: List[List[Any]] = []
+        for s, d, streaming in pgt.edges:
+            ebuf.append([s, d, streaming])
+            if len(ebuf) >= chunk:
+                fh.write(json.dumps({"type": "edges", "items": ebuf}) + "\n")
+                ebuf = []
+        if ebuf:
+            fh.write(json.dumps({"type": "edges", "items": ebuf}) + "\n")
+
+
+def iter_pgt(path: str) -> Iterator[Tuple[str, Any]]:
+    """Incremental PGT reader: yields ('header'|'drop'|'edge', payload)."""
+    with gzip.open(path, "rt") as fh:
+        for line in fh:
+            rec = json.loads(line)
+            if rec["type"] == "header":
+                yield "header", rec
+            elif rec["type"] == "drops":
+                for item in rec["items"]:
+                    yield "drop", _spec_from_json(item)
+            elif rec["type"] == "edges":
+                for item in rec["items"]:
+                    yield "edge", tuple(item)
+
+
+def load_pgt(path: str) -> PhysicalGraphTemplate:
+    pgt: Optional[PhysicalGraphTemplate] = None
+    for kind, payload in iter_pgt(path):
+        if kind == "header":
+            pgt = PhysicalGraphTemplate(name=payload["name"])
+        elif kind == "drop":
+            assert pgt is not None
+            pgt.add_drop(payload)
+        else:
+            assert pgt is not None
+            pgt.edges.append(payload)  # bulk append; adjacency lazily rebuilt
+    assert pgt is not None, f"no header found in {path}"
+    pgt._succ = pgt._pred = None
+    return pgt

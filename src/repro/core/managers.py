@@ -1,0 +1,306 @@
+"""Hierarchical Drop Managers (paper §3.5, Fig. 6).
+
+"A Node Drop Manager exists for each compute node ... ultimately responsible
+for creating and deleting Drops.  Because compute nodes are grouped into Data
+Islands, a Data Island Drop Manager exists at the Data Island level ...
+Finally, in order to expose a single point of contact a Master Drop Manager
+manages all Data Island Managers."
+
+Deployment recursively traverses the hierarchy: the Master splits the PG by
+island placement, each Island splits by node placement and records the edges
+crossing node boundaries, communicating them to the relevant Node Managers
+afterwards.
+
+This container is one host, so "nodes" are thread pools; the structure,
+splitting logic and bookkeeping are exactly the paper's, and node failure /
+island accounting operate on these objects.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .drop import AppDrop, DataDrop, Drop, DropState, make_payload
+from .events import EventBus
+from .mapping import NodeInfo
+from .session import Session
+from .unroll import DropSpec, PhysicalGraphTemplate
+
+# ---------------------------------------------------------------------------
+# Application registry — pipeline components (paper §3.1)
+# ---------------------------------------------------------------------------
+
+AppFunc = Callable[[List[DataDrop], List[DataDrop], AppDrop], Any]
+
+_APP_REGISTRY: Dict[str, AppFunc] = {}
+
+
+def register_app(name: str) -> Callable[[AppFunc], AppFunc]:
+    def deco(fn: AppFunc) -> AppFunc:
+        _APP_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_app(name: str) -> AppFunc:
+    if name not in _APP_REGISTRY:
+        raise KeyError(f"app {name!r} not registered "
+                       f"(known: {sorted(_APP_REGISTRY)})")
+    return _APP_REGISTRY[name]
+
+
+# -- built-in apps (paper §3.7: bash commands, python funcs, sockets...) ------
+
+
+@register_app("noop")
+def _noop(inputs: List[DataDrop], outputs: List[DataDrop],
+          app: AppDrop) -> None:
+    for o in outputs:
+        o.write(None)
+
+
+@register_app("identity")
+def _identity(inputs: List[DataDrop], outputs: List[DataDrop],
+              app: AppDrop) -> None:
+    vals = [i.read() for i in inputs]
+    v = vals[0] if len(vals) == 1 else vals
+    for o in outputs:
+        o.write(v)
+
+
+@register_app("sleep")
+def _sleep(inputs: List[DataDrop], outputs: List[DataDrop],
+           app: AppDrop) -> None:
+    time.sleep(float(app.meta.get("seconds", 0.001)))
+    for o in outputs:
+        o.write(None)
+
+
+@register_app("bash")
+def _bash(inputs: List[DataDrop], outputs: List[DataDrop],
+          app: AppDrop) -> None:
+    import subprocess
+    cmd = app.meta["command"]
+    res = subprocess.run(cmd, shell=True, capture_output=True, text=True,
+                         timeout=app.meta.get("timeout", 60))
+    if res.returncode != 0:
+        raise RuntimeError(f"bash app failed ({res.returncode}): "
+                           f"{res.stderr[:500]}")
+    for o in outputs:
+        o.write(res.stdout)
+
+
+# ---------------------------------------------------------------------------
+# Node Drop Manager
+# ---------------------------------------------------------------------------
+
+
+class NodeDropManager:
+    """Creates/deletes Drops for one compute node; bottom of the hierarchy."""
+
+    def __init__(self, info: NodeInfo, max_workers: int = 4) -> None:
+        self.info = info
+        self.executor = ThreadPoolExecutor(
+            max_workers=max_workers,
+            thread_name_prefix=f"ndm-{info.name}")
+        self.sessions: Dict[str, Dict[str, Drop]] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def name(self) -> str:
+        return self.info.name
+
+    # -- deployment ------------------------------------------------------------
+    def create_drops(self, session: Session,
+                     specs: Sequence[DropSpec]) -> Dict[str, Drop]:
+        """Instantiate the Drops placed on this node (paper: NM deployment =
+        'checking the validity of the PG and the creation of the Session and
+        all its Drops')."""
+        created: Dict[str, Drop] = {}
+        for spec in specs:
+            if spec.node != self.name:
+                raise ValueError(
+                    f"drop {spec.uid} placed on {spec.node}, "
+                    f"not this node {self.name}")
+            drop = self._instantiate(spec, session.bus)
+            created[spec.uid] = drop
+            session.add_drop(drop)
+        with self._lock:
+            self.sessions.setdefault(session.session_id, {}).update(created)
+        return created
+
+    def _instantiate(self, spec: DropSpec, bus: EventBus) -> Drop:
+        meta = {"oid": spec.oid, "construct": spec.construct, **spec.params}
+        if spec.kind == "data":
+            path = None
+            if spec.payload_kind == "file":
+                path = spec.params.get(
+                    "path", f"/tmp/repro_drops/{_safe(spec.uid)}.pkl")
+            payload = make_payload(spec.payload_kind, path=path)
+            d: Drop = DataDrop(spec.uid, payload=payload, bus=bus,
+                               node=self.name, meta=meta,
+                               lifetime=spec.params.get("lifetime"))
+            d.meta["data_volume"] = spec.data_volume
+        else:
+            func = get_app(spec.app) if spec.app else None
+            d = AppDrop(spec.uid, func,
+                        error_threshold=spec.error_threshold,
+                        executor=self.executor, bus=bus, node=self.name,
+                        meta=meta)
+            d.meta["execution_time"] = spec.execution_time
+        return d
+
+    # -- failure simulation -----------------------------------------------------
+    def fail(self) -> None:
+        """Simulate node death: everything non-terminal on it is lost."""
+        self.info.alive = False
+
+    def shutdown(self) -> None:
+        self.executor.shutdown(wait=False, cancel_futures=True)
+
+
+# ---------------------------------------------------------------------------
+# Data Island Drop Manager
+# ---------------------------------------------------------------------------
+
+
+class DataIslandDropManager:
+    def __init__(self, name: str,
+                 node_managers: Sequence[NodeDropManager]) -> None:
+        self.name = name
+        self.node_managers = {nm.name: nm for nm in node_managers}
+        self.cross_node_edges: List[Tuple[str, str, bool]] = []
+
+    def deploy(self, session: Session, pgt: PhysicalGraphTemplate,
+               specs: Sequence[DropSpec]) -> None:
+        """Split by node placement; record crossing edges; wire afterwards."""
+        by_node: Dict[str, List[DropSpec]] = {}
+        for spec in specs:
+            by_node.setdefault(spec.node or "?", []).append(spec)
+        unknown = set(by_node) - set(self.node_managers)
+        if unknown:
+            raise ValueError(f"island {self.name}: drops placed on unknown "
+                             f"nodes {sorted(unknown)}")
+        for node, nspecs in by_node.items():
+            self.node_managers[node].create_drops(session, nspecs)
+        # intra-island edges: wire those whose both ends live here
+        mine = {s.uid for s in specs}
+        for s, d, streaming in pgt.edges:
+            if s in mine and d in mine:
+                _wire(session, s, d, streaming)
+            elif s in mine or d in mine:
+                self.cross_node_edges.append((s, d, streaming))
+
+    def nodes_alive(self) -> List[str]:
+        return [n for n, nm in self.node_managers.items() if nm.info.alive]
+
+
+# ---------------------------------------------------------------------------
+# Master Drop Manager
+# ---------------------------------------------------------------------------
+
+
+class MasterDropManager:
+    """Single point of contact (paper §3.5); splits the PG by island."""
+
+    def __init__(self, islands: Sequence[DataIslandDropManager]) -> None:
+        self.islands = {im.name: im for im in islands}
+        self._sessions: Dict[str, Session] = {}
+        self._session_counter = 0
+
+    # island of a node
+    def _island_of(self, node: str) -> DataIslandDropManager:
+        for im in self.islands.values():
+            if node in im.node_managers:
+                return im
+        raise KeyError(f"node {node!r} not managed by any island")
+
+    def create_session(self, session_id: Optional[str] = None,
+                       bus: Optional[EventBus] = None) -> Session:
+        if session_id is None:
+            self._session_counter += 1
+            session_id = f"session-{self._session_counter}"
+        s = Session(session_id, bus=bus)
+        self._sessions[session_id] = s
+        return s
+
+    def deploy(self, session: Session,
+               pgt: PhysicalGraphTemplate) -> None:
+        """Recursive deployment (paper Fig. 6): split by island, then node."""
+        session.deploy()
+        by_island: Dict[str, List[DropSpec]] = {}
+        for spec in pgt.drops.values():
+            if spec.node is None:
+                raise ValueError(f"drop {spec.uid} not mapped to a node; "
+                                 "run mapping.map_partitions first")
+            im = self._island_of(spec.node)
+            by_island.setdefault(im.name, []).append(spec)
+        for iname, specs in by_island.items():
+            self.islands[iname].deploy(session, pgt, specs)
+        # wire edges crossing island boundaries (recorded by the islands)
+        wired = set()
+        for im in self.islands.values():
+            for s, d, streaming in im.cross_node_edges:
+                key = (s, d, streaming)
+                if key in wired:
+                    continue
+                if s in session.drops and d in session.drops:
+                    _wire(session, s, d, streaming)
+                    wired.add(key)
+            im.cross_node_edges = [
+                e for e in im.cross_node_edges if e not in wired]
+
+    def node_managers(self) -> Dict[str, NodeDropManager]:
+        out: Dict[str, NodeDropManager] = {}
+        for im in self.islands.values():
+            out.update(im.node_managers)
+        return out
+
+    def shutdown(self) -> None:
+        for nm in self.node_managers().values():
+            nm.shutdown()
+
+
+def _wire(session: Session, src: str, dst: str, streaming: bool) -> None:
+    s, d = session.drops[src], session.drops[dst]
+    if isinstance(s, DataDrop) and isinstance(d, AppDrop):
+        d.add_input(s, streaming=streaming)
+    elif isinstance(s, AppDrop) and isinstance(d, DataDrop):
+        s.add_output(d)
+    else:
+        raise ValueError(f"invalid edge {src}->{dst}: "
+                         f"{type(s).__name__}->{type(d).__name__}")
+
+
+def _safe(uid: str) -> str:
+    return uid.replace("/", "_").replace("#", "_").replace(".", "_")
+
+
+# ---------------------------------------------------------------------------
+# Convenience topology builder
+# ---------------------------------------------------------------------------
+
+
+def make_cluster(num_nodes: int, num_islands: int = 1,
+                 workers_per_node: int = 4
+                 ) -> Tuple[MasterDropManager, List[NodeInfo]]:
+    """Build a Master/Island/Node manager hierarchy (paper Fig. 6)."""
+    if num_islands < 1 or num_nodes < num_islands:
+        raise ValueError("need >=1 island and nodes >= islands")
+    nodes: List[NodeInfo] = []
+    islands: List[DataIslandDropManager] = []
+    per = num_nodes // num_islands
+    extra = num_nodes % num_islands
+    idx = 0
+    for i in range(num_islands):
+        count = per + (1 if i < extra else 0)
+        nms = []
+        for _ in range(count):
+            info = NodeInfo(name=f"node{idx}", island=f"island{i}")
+            nodes.append(info)
+            nms.append(NodeDropManager(info, max_workers=workers_per_node))
+            idx += 1
+        islands.append(DataIslandDropManager(f"island{i}", nms))
+    return MasterDropManager(islands), nodes

@@ -1,0 +1,159 @@
+"""Resource mapping: PGT partitions -> physical nodes (paper §3.5).
+
+"We use the METIS software library, which internally uses a multilevel k-way
+partitioning algorithm, to merge the p PGT partitions into m virtual clusters
+if p > m ... with the goal of balancing the overall workload (both compute
+time and memory usage) evenly.  The physical mapping from the m merged
+clusters to m compute nodes becomes a straightforward round-robin assignment."
+
+We implement the same multilevel scheme in pure python:
+
+1. **Coarsen**: build the partition-level graph (vertex weight = total
+   execution time + memory; edge weight = cross-partition data volume) and
+   repeatedly contract heaviest-edge-matching pairs until <= m vertices.
+2. **Initial assignment**: round-robin of coarse vertices to nodes.
+3. **Refine** (Kernighan–Lin style): greedily move partitions between nodes
+   when it reduces ``alpha * imbalance + beta * cut_volume``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .unroll import PhysicalGraphTemplate
+
+
+@dataclass
+class NodeInfo:
+    """A homogeneous compute node (paper assumes identical capabilities)."""
+
+    name: str
+    island: str = "island0"
+    alive: bool = True
+
+
+@dataclass
+class PartitionGraph:
+    vweights: Dict[int, float] = field(default_factory=dict)       # load
+    vmem: Dict[int, float] = field(default_factory=dict)           # memory
+    eweights: Dict[Tuple[int, int], float] = field(default_factory=dict)
+
+    @classmethod
+    def from_pgt(cls, pgt: PhysicalGraphTemplate) -> "PartitionGraph":
+        g = cls()
+        for spec in pgt.drops.values():
+            g.vweights[spec.partition] = (
+                g.vweights.get(spec.partition, 0.0) + spec.weight())
+            g.vmem[spec.partition] = (
+                g.vmem.get(spec.partition, 0.0) +
+                (spec.data_volume if spec.kind == "data" else 0.0))
+        for s, d, _ in pgt.edges:
+            ps, pd = pgt.drops[s].partition, pgt.drops[d].partition
+            if ps == pd:
+                continue
+            key = (min(ps, pd), max(ps, pd))
+            vol = (pgt.drops[s].data_volume if pgt.drops[s].kind == "data"
+                   else pgt.drops[d].data_volume)
+            g.eweights[key] = g.eweights.get(key, 0.0) + vol
+        return g
+
+
+def map_partitions(pgt: PhysicalGraphTemplate, nodes: Sequence[NodeInfo],
+                   alpha: float = 1.0, beta: float = 1e-9,
+                   refine_iters: int = 200) -> Dict[int, str]:
+    """Assign each PGT partition to a node; also stamps ``spec.node``."""
+    live = [n for n in nodes if n.alive]
+    if not live:
+        raise ValueError("no live nodes to map onto")
+    m = len(live)
+    g = PartitionGraph.from_pgt(pgt)
+    parts = sorted(g.vweights)
+
+    # --- coarsen: heaviest-edge matching until <= m super-vertices -----------
+    group_of: Dict[int, int] = {p: p for p in parts}
+
+    def find(p: int) -> int:
+        while group_of[p] != p:
+            group_of[p] = group_of[group_of[p]]
+            p = group_of[p]
+        return p
+
+    ngroups = len(parts)
+    edges = sorted(g.eweights.items(), key=lambda kv: -kv[1])
+    ei = 0
+    while ngroups > m and ei < len(edges):
+        (a, b), w = edges[ei]
+        ei += 1
+        if w <= 0.0:
+            break   # zero-communication pairs: leave to load-based merging
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            group_of[rb] = ra
+            ngroups -= 1
+    # if still too many groups (disconnected), merge lightest-load pairs
+    while ngroups > m:
+        loads: Dict[int, float] = {}
+        for p in parts:
+            r = find(p)
+            loads[r] = loads.get(r, 0.0) + g.vweights[p] + 1e-6 * g.vmem[p]
+        roots = sorted(loads, key=lambda r: loads[r])
+        group_of[roots[1]] = roots[0]
+        ngroups -= 1
+
+    clusters: Dict[int, List[int]] = {}
+    for p in parts:
+        clusters.setdefault(find(p), []).append(p)
+
+    # --- initial assignment: balanced greedy (round-robin by descending load) --
+    cluster_load = {r: sum(g.vweights[p] + 1e-6 * g.vmem[p] for p in ps)
+                    for r, ps in clusters.items()}
+    node_load = {n.name: 0.0 for n in live}
+    assign: Dict[int, str] = {}
+    for r in sorted(clusters, key=lambda r: -cluster_load[r]):
+        tgt = min(live, key=lambda n: node_load[n.name])
+        for p in clusters[r]:
+            assign[p] = tgt.name
+        node_load[tgt.name] += cluster_load[r]
+
+    # --- KL-style refinement ---------------------------------------------------
+    def cut_volume() -> float:
+        return sum(w for (a, b), w in g.eweights.items()
+                   if assign[a] != assign[b])
+
+    def imbalance() -> float:
+        # sum of squared loads: strictly decreases on any rebalancing move
+        # (no max-based plateaus), minimised at perfect balance.
+        return sum(l * l for l in node_load.values())
+
+    def cost() -> float:
+        return alpha * imbalance() + beta * cut_volume()
+
+    cur = cost()
+    for _ in range(refine_iters):
+        improved = False
+        # move the partition with the best gain
+        for p in parts:
+            src = assign[p]
+            w = g.vweights[p] + 1e-6 * g.vmem[p]
+            for n in live:
+                if n.name == src:
+                    continue
+                assign[p] = n.name
+                node_load[src] -= w
+                node_load[n.name] += w
+                c = cost()
+                if c + 1e-15 < cur:
+                    cur = c
+                    improved = True
+                    break
+                assign[p] = src
+                node_load[src] += w
+                node_load[n.name] -= w
+            if improved:
+                break
+        if not improved:
+            break
+
+    for spec in pgt.drops.values():
+        spec.node = assign[spec.partition]
+    return assign

@@ -1,0 +1,285 @@
+"""Logical partitioning of the PGT (paper §3.4, step 3).
+
+Two families, exactly as the paper describes:
+
+* ``min_time`` — "produce an optimal number of partitions such that first the
+  total completion time of the pipeline ... is minimised, and second at any
+  point in time the number of drops running in parallel within a single
+  partition is no greater than a Degree of Parallelism (DoP) threshold."
+  Implemented as edge-zeroing internalisation (Sarkar-style): start with one
+  partition per drop, repeatedly merge across the heaviest data-movement edge
+  when doing so does not increase the estimated completion time and respects
+  the DoP cap; refined with simulated annealing (the paper cites simulated
+  annealing and stochastic local search for exactly this step).
+
+* ``min_res`` — "minimise the number of produced partitions subject to
+  satisfying completion deadline and the DoP threshold constraints."
+  Implemented as topological bin-packing with deadline checks + annealing.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from .schedule import (DEFAULT_BANDWIDTH, critical_path, edge_cost,
+                       simulate_makespan)
+from .unroll import PhysicalGraphTemplate
+
+
+@dataclass
+class PartitionResult:
+    num_partitions: int
+    makespan: float
+    algorithm: str
+    dop: int
+
+
+# ---------------------------------------------------------------------------
+# Degree-of-parallelism accounting
+# ---------------------------------------------------------------------------
+
+
+def _partition_dop(pgt: PhysicalGraphTemplate, members: Set[str]) -> int:
+    """Max antichain width restricted to a partition's app drops.
+
+    Exact max-antichain is expensive; we use the standard level-width
+    over-approximation (drops at the same DAG depth can run concurrently),
+    which is what constrains the schedule in practice.
+    """
+    depth: Dict[str, int] = {}
+    width: Dict[int, int] = {}
+    for uid in pgt.topological_order():
+        d = 0
+        for p in pgt.predecessors(uid):
+            d = max(d, depth[p] + 1)
+        depth[uid] = d
+        if uid in members and pgt.drops[uid].kind == "app":
+            width[d] = width.get(d, 0) + 1
+    return max(width.values()) if width else 0
+
+
+class _UnionFind:
+    def __init__(self, items: List[str]) -> None:
+        self.parent = {i: i for i in items}
+        self.rank = {i: 0 for i in items}
+
+    def find(self, x: str) -> str:
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a: str, b: str) -> str:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return ra
+        if self.rank[ra] < self.rank[rb]:
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        if self.rank[ra] == self.rank[rb]:
+            self.rank[ra] += 1
+        return ra
+
+
+def _assign(pgt: PhysicalGraphTemplate, groups: Dict[str, int]) -> None:
+    for uid, part in groups.items():
+        pgt.drops[uid].partition = part
+
+
+def _renumber(uf: "_UnionFind", pgt: PhysicalGraphTemplate) -> Dict[str, int]:
+    ids: Dict[str, int] = {}
+    groups: Dict[str, int] = {}
+    for uid in pgt.drops:
+        root = uf.find(uid)
+        if root not in ids:
+            ids[root] = len(ids)
+        groups[uid] = ids[root]
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# min_time
+# ---------------------------------------------------------------------------
+
+
+def min_time(pgt: PhysicalGraphTemplate, dop: int = 8,
+             bandwidth: float = DEFAULT_BANDWIDTH,
+             anneal_iters: int = 0, seed: int = 0,
+             max_trials: Optional[int] = None) -> PartitionResult:
+    """``max_trials`` bounds the number of merge trials (each trial runs a
+    full makespan simulation, O(N log N)); for very large PGTs pass a
+    budget — the heaviest data-movement edges are tried first, which is
+    where nearly all of the win lives."""
+    uids = list(pgt.drops)
+    uf = _UnionFind(uids)
+
+    # level-width tracking per merged group (incremental DoP bound)
+    depth: Dict[str, int] = {}
+    for uid in pgt.topological_order():
+        depth[uid] = max((depth[p] + 1 for p in pgt.predecessors(uid)),
+                         default=0)
+    width: Dict[str, Dict[int, int]] = {}
+    for uid in uids:
+        if pgt.drops[uid].kind == "app":
+            width[uid] = {depth[uid]: 1}
+        else:
+            width[uid] = {}
+
+    def merged_width_ok(ra: str, rb: str) -> bool:
+        wa, wb = width[ra], width[rb]
+        small, big = (wa, wb) if len(wa) < len(wb) else (wb, wa)
+        return all(big.get(d, 0) + c <= dop for d, c in small.items())
+
+    # heaviest-edge-first internalisation
+    edges = sorted(
+        ((edge_cost(pgt, s, d, bandwidth), s, d) for s, d, _ in pgt.edges),
+        key=lambda t: -t[0])
+    if max_trials is not None:
+        edges = edges[:max_trials]
+
+    _assign(pgt, _renumber(uf, pgt))
+    best_time = simulate_makespan(pgt, dop, bandwidth)
+
+    for cost, s, d in edges:
+        if cost <= 0.0:
+            # zero-cost edges: merge freely if DoP allows (fewer partitions,
+            # same makespan)
+            pass
+        ra, rb = uf.find(s), uf.find(d)
+        if ra == rb:
+            continue
+        if not merged_width_ok(ra, rb):
+            continue
+        # tentatively merge and check completion time does not regress
+        saved_parent = dict(uf.parent)
+        saved_rank = dict(uf.rank)
+        root = uf.union(ra, rb)
+        _assign(pgt, _renumber(uf, pgt))
+        t = simulate_makespan(pgt, dop, bandwidth)
+        if t <= best_time + 1e-12:
+            best_time = t
+            other = rb if root == ra else ra
+            merged = dict(width[root])
+            for k, v in width[other].items():
+                merged[k] = merged.get(k, 0) + v
+            width[root] = merged
+        else:
+            uf.parent, uf.rank = saved_parent, saved_rank
+    groups = _renumber(uf, pgt)
+    _assign(pgt, groups)
+
+    if anneal_iters:
+        best_time = _anneal(pgt, dop, bandwidth, anneal_iters, seed,
+                            objective="time")
+    n = len(set(groups.values()))
+    n = len({s.partition for s in pgt.drops.values()})
+    return PartitionResult(n, best_time, "min_time", dop)
+
+
+# ---------------------------------------------------------------------------
+# min_res
+# ---------------------------------------------------------------------------
+
+
+def min_res(pgt: PhysicalGraphTemplate, deadline: float, dop: int = 8,
+            bandwidth: float = DEFAULT_BANDWIDTH,
+            anneal_iters: int = 0, seed: int = 0) -> PartitionResult:
+    """Greedy topological packing into as few partitions as possible."""
+    order = pgt.topological_order()
+    # lower bound on achievable makespan: unpartitioned critical path
+    lower = critical_path(pgt, bandwidth, partitioned=False)
+    deadline = max(deadline, lower)
+
+    parts: List[Set[str]] = []
+    assignment: Dict[str, int] = {}
+
+    def level_ok(members: Set[str], uid: str) -> bool:
+        trial = set(members)
+        trial.add(uid)
+        return _partition_dop(pgt, trial) <= dop
+
+    for uid in order:
+        placed = False
+        # prefer the partition of a predecessor (internalise heavy edges)
+        cand: List[int] = []
+        for p in pgt.predecessors(uid):
+            if p in assignment and assignment[p] not in cand:
+                cand.append(assignment[p])
+        cand.extend(i for i in range(len(parts)) if i not in cand)
+        for i in cand:
+            if not level_ok(parts[i], uid):
+                continue
+            parts[i].add(uid)
+            assignment[uid] = i
+            pgt.drops[uid].partition = i
+            t = simulate_makespan(pgt, dop, bandwidth)
+            if t <= deadline * (1 + 1e-9):
+                placed = True
+                break
+            parts[i].discard(uid)
+            del assignment[uid]
+        if not placed:
+            parts.append({uid})
+            assignment[uid] = len(parts) - 1
+            pgt.drops[uid].partition = len(parts) - 1
+
+    makespan = simulate_makespan(pgt, dop, bandwidth)
+    if anneal_iters:
+        makespan = _anneal(pgt, dop, bandwidth, anneal_iters, seed,
+                           objective="res", deadline=deadline)
+    n = len({s.partition for s in pgt.drops.values()})
+    return PartitionResult(n, makespan, "min_res", dop)
+
+
+# ---------------------------------------------------------------------------
+# simulated annealing refinement (paper cites [51] simulated annealing)
+# ---------------------------------------------------------------------------
+
+
+def _anneal(pgt: PhysicalGraphTemplate, dop: int, bandwidth: float,
+            iters: int, seed: int, objective: str,
+            deadline: Optional[float] = None) -> float:
+    rng = random.Random(seed)
+    uids = list(pgt.drops)
+    cur_parts = {u: pgt.drops[u].partition for u in uids}
+    nparts = max(cur_parts.values()) + 1 if cur_parts else 1
+
+    def score() -> float:
+        t = simulate_makespan(pgt, dop, bandwidth)
+        n = len({s.partition for s in pgt.drops.values()})
+        if objective == "time":
+            return t + 1e-9 * n
+        # res: minimise partitions, deadline as penalty
+        pen = 0.0 if (deadline is None or t <= deadline * (1 + 1e-9)) \
+            else 1e6 * (t - deadline)
+        return n + pen
+
+    cur = score()
+    best = cur
+    best_parts = dict(cur_parts)
+    temp0 = max(cur, 1.0)
+    for k in range(iters):
+        u = rng.choice(uids)
+        old = pgt.drops[u].partition
+        new = rng.randrange(nparts)
+        if new == old:
+            continue
+        pgt.drops[u].partition = new
+        members = {x for x in uids if pgt.drops[x].partition == new}
+        if _partition_dop(pgt, members) > dop:
+            pgt.drops[u].partition = old
+            continue
+        s = score()
+        temp = temp0 * (1.0 - k / max(iters, 1)) + 1e-9
+        if s <= cur or rng.random() < math.exp(-(s - cur) / temp):
+            cur = s
+            if s < best:
+                best = s
+                best_parts = {x: pgt.drops[x].partition for x in uids}
+        else:
+            pgt.drops[u].partition = old
+    for x, p in best_parts.items():
+        pgt.drops[x].partition = p
+    return simulate_makespan(pgt, dop, bandwidth)

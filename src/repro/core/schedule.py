@@ -1,0 +1,141 @@
+"""Scheduling cost model for partitioned physical graphs (paper §3.4–§3.5).
+
+Estimates the makespan of a partitioned PGT under the paper's assumptions:
+
+* intra-partition edges are free (drops are co-located),
+* inter-partition edges cost ``data_volume / bandwidth`` (data movement),
+* each partition executes at most ``DoP`` application drops concurrently,
+* resources are homogeneous.
+
+Used both by the ``min_time`` / ``min_res`` partitioners as their objective
+and by the partition-quality benchmark.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .unroll import PhysicalGraphTemplate
+
+DEFAULT_BANDWIDTH = 1e9   # bytes/s across partitions (homogeneous links)
+
+
+def edge_cost(pgt: PhysicalGraphTemplate, src: str, dst: str,
+              bandwidth: float = DEFAULT_BANDWIDTH) -> float:
+    """Cost of an edge if it crosses partitions: moving the data payload."""
+    s = pgt.drops[src]
+    d = pgt.drops[dst]
+    vol = s.data_volume if s.kind == "data" else d.data_volume
+    return vol / bandwidth
+
+
+def critical_path(pgt: PhysicalGraphTemplate,
+                  bandwidth: float = DEFAULT_BANDWIDTH,
+                  partitioned: bool = True) -> float:
+    """Longest path through the DAG (execution + cross-partition movement)."""
+    dist: Dict[str, float] = {}
+    for uid in pgt.topological_order():
+        spec = pgt.drops[uid]
+        best = 0.0
+        for p in pgt.predecessors(uid):
+            c = 0.0
+            if (not partitioned) or (pgt.drops[p].partition !=
+                                     spec.partition):
+                c = edge_cost(pgt, p, uid, bandwidth)
+            best = max(best, dist[p] + c)
+        dist[uid] = best + spec.weight()
+    return max(dist.values()) if dist else 0.0
+
+
+def simulate_makespan(pgt: PhysicalGraphTemplate, dop: int,
+                      bandwidth: float = DEFAULT_BANDWIDTH) -> float:
+    """List-scheduling simulation honouring the per-partition DoP cap.
+
+    Event-driven simulation: an app drop becomes ready when all its
+    predecessors finished (plus cross-partition transfer latency); each
+    partition runs at most ``dop`` apps at once.  Data drops are free.
+    """
+    preds_left: Dict[str, int] = {}
+    ready_at: Dict[str, float] = {}
+    for uid in pgt.drops:
+        preds_left[uid] = len(pgt.predecessors(uid))
+        ready_at[uid] = 0.0
+
+    # (time, seq, kind, uid) events; kind 0 = drop became ready, 1 = app done
+    evq: List[Tuple[float, int, int, str]] = []
+    seq = 0
+    running: Dict[int, int] = {}     # partition -> running apps
+    waiting: Dict[int, List[Tuple[float, int, str]]] = {}
+    finished_at: Dict[str, float] = {}
+    makespan = 0.0
+
+    def push_ready(uid: str, t: float) -> None:
+        nonlocal seq
+        heapq.heappush(evq, (t, seq, 0, uid))
+        seq += 1
+
+    for uid in pgt.roots():
+        push_ready(uid, 0.0)
+
+    def try_start(part: int, t: float) -> None:
+        nonlocal seq
+        q = waiting.get(part)
+        while q and running.get(part, 0) < dop:
+            _, _, uid = heapq.heappop(q)
+            running[part] = running.get(part, 0) + 1
+            dur = pgt.drops[uid].weight()
+            heapq.heappush(evq, (t + dur, seq, 1, uid))
+            seq += 1
+
+    def complete(uid: str, t: float) -> None:
+        nonlocal makespan
+        finished_at[uid] = t
+        makespan = max(makespan, t)
+        spec = pgt.drops[uid]
+        for s in pgt.successors(uid):
+            cost = 0.0
+            if pgt.drops[s].partition != spec.partition:
+                cost = edge_cost(pgt, uid, s, bandwidth)
+            ready_at[s] = max(ready_at[s], t + cost)
+            preds_left[s] -= 1
+            if preds_left[s] == 0:
+                push_ready(s, ready_at[s])
+
+    while evq:
+        t, _, kind, uid = heapq.heappop(evq)
+        spec = pgt.drops[uid]
+        if kind == 1:                       # app finished
+            running[spec.partition] -= 1
+            complete(uid, t)
+            try_start(spec.partition, t)
+            continue
+        # drop became ready
+        if spec.kind == "data" or spec.weight() == 0.0:
+            complete(uid, t)
+            continue
+        part = spec.partition
+        heapq.heappush(waiting.setdefault(part, []), (t, id(uid), uid))
+        try_start(part, t)
+
+    return makespan
+
+
+def partition_stats(pgt: PhysicalGraphTemplate) -> Dict[str, float]:
+    parts: Dict[int, float] = {}
+    cross_volume = 0.0
+    for uid, spec in pgt.drops.items():
+        parts[spec.partition] = parts.get(spec.partition, 0.0) + spec.weight()
+    for s, d, _ in pgt.edges:
+        if pgt.drops[s].partition != pgt.drops[d].partition:
+            sp = pgt.drops[s]
+            cross_volume += (sp.data_volume if sp.kind == "data"
+                             else pgt.drops[d].data_volume)
+    loads = list(parts.values()) or [0.0]
+    return {
+        "num_partitions": float(len(parts)),
+        "cross_volume": cross_volume,
+        "max_load": max(loads),
+        "mean_load": sum(loads) / len(loads),
+        "imbalance": max(loads) / max(sum(loads) / len(loads), 1e-12),
+    }

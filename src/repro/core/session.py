@@ -1,0 +1,209 @@
+"""Sessions — isolated physical-graph executions (paper §3.5).
+
+"Sessions are completely isolated from one another. ... Sessions have a simple
+lifecycle: they are first created, then a complete or a partial PG is attached
+to them, after which the graph can be deployed.  This leaves the session in a
+running state until the graph has finished its execution."
+"""
+from __future__ import annotations
+
+import enum
+import json
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from .drop import AppDrop, DataDrop, Drop, DropState, MemoryPayload
+from .events import EventBus
+
+
+class SessionState(str, enum.Enum):
+    PRISTINE = "PRISTINE"
+    BUILDING = "BUILDING"
+    DEPLOYING = "DEPLOYING"
+    RUNNING = "RUNNING"
+    FINISHED = "FINISHED"
+    CANCELLED = "CANCELLED"
+
+
+_TERMINAL_DROP = {DropState.COMPLETED, DropState.ERROR, DropState.CANCELLED,
+                  DropState.SKIPPED, DropState.EXPIRED, DropState.DELETED}
+
+
+class Session:
+    def __init__(self, session_id: str, bus: Optional[EventBus] = None) -> None:
+        self.session_id = session_id
+        self.bus = bus or EventBus()
+        self.state = SessionState.PRISTINE
+        self.drops: Dict[str, Drop] = {}
+        self._finished = threading.Event()
+        self._terminal: set = set()     # incremental completion tracking
+        self._lock = threading.Lock()
+        self.created_at = time.monotonic()
+        self.bus.subscribe_all(self._on_event)
+
+    # -- graph attachment --------------------------------------------------------
+    def add_drop(self, drop: Drop) -> None:
+        self.state = SessionState.BUILDING
+        self.drops[drop.uid] = drop
+
+    # -- execution ----------------------------------------------------------------
+    def deploy(self) -> None:
+        self.state = SessionState.DEPLOYING
+
+    def start(self) -> None:
+        """Trigger root drops (paper §3.6)."""
+        self.state = SessionState.RUNNING
+        roots_data: List[DataDrop] = []
+        roots_app: List[AppDrop] = []
+        for d in self.drops.values():
+            if isinstance(d, DataDrop) and not d.producers:
+                roots_data.append(d)
+            elif isinstance(d, AppDrop) and not d.inputs \
+                    and not d.streaming_inputs:
+                roots_app.append(d)
+        # root data: "their data is considered to be present and therefore
+        # they are marked as completed"
+        for d in roots_data:
+            if d.state in (DropState.INITIALIZED, DropState.WRITING):
+                d.set_completed()
+        for a in roots_app:
+            if a.state is DropState.INITIALIZED:
+                a.trigger_root()
+        self._check_finished()
+
+    def _on_event(self, event: Any) -> None:
+        # incremental completion tracking: O(1) per event, not O(N) —
+        # the decentralised engine must stay flat-overhead as graphs grow
+        # (paper Fig. 8)
+        if event.type != "status":
+            return
+        uid = event.source_uid
+        d = self.drops.get(uid)
+        if d is None:
+            return
+        with self._lock:
+            if d.state in _TERMINAL_DROP:
+                self._terminal.add(uid)
+            else:
+                self._terminal.discard(uid)   # fault recovery resets drops
+            done = (self.state is SessionState.RUNNING
+                    and len(self._terminal) == len(self.drops))
+        if done:
+            self._check_finished()
+
+    def _check_finished(self) -> None:
+        if self.state is not SessionState.RUNNING:
+            return
+        if all(d.state in _TERMINAL_DROP for d in self.drops.values()):
+            self.state = SessionState.FINISHED
+            self._finished.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        self._check_finished()
+        return self._finished.wait(timeout)
+
+    def reopen(self) -> None:
+        """Back to RUNNING after drops were reset (fault recovery)."""
+        self.state = SessionState.RUNNING
+        self._rebuild_terminal()
+        self._finished.clear()
+
+    def _rebuild_terminal(self) -> None:
+        """Resync the incremental tracker after out-of-band state changes
+        (checkpoint restore / fault recovery set states without events)."""
+        with self._lock:
+            self._terminal = {u for u, d in self.drops.items()
+                              if d.state in _TERMINAL_DROP}
+
+    def cancel(self) -> None:
+        for d in self.drops.values():
+            d.cancel()
+        self.state = SessionState.CANCELLED
+        self._finished.set()
+
+    # -- monitoring (paper: DMs "allow users to query and monitor graph
+    # execution status") -----------------------------------------------------------
+    def status(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for d in self.drops.values():
+            counts[d.state.value] = counts.get(d.state.value, 0) + 1
+        return counts
+
+    def errors(self) -> List[Drop]:
+        return [d for d in self.drops.values()
+                if d.state is DropState.ERROR]
+
+    # -- checkpoint / restart ---------------------------------------------------------
+    def checkpoint(self, directory: str,
+                   spill_payloads: bool = True) -> str:
+        """Persist all drop states (+ completed in-memory payloads)."""
+        path = Path(directory)
+        path.mkdir(parents=True, exist_ok=True)
+        records = {uid: d.to_record() for uid, d in self.drops.items()}
+        if spill_payloads:
+            pdir = path / "payloads"
+            pdir.mkdir(exist_ok=True)
+            for uid, d in self.drops.items():
+                if (isinstance(d, DataDrop)
+                        and d.state is DropState.COMPLETED
+                        and isinstance(d.payload, MemoryPayload)
+                        and d.payload.exists()):
+                    with open(pdir / f"{_safe(uid)}.pkl", "wb") as fh:
+                        pickle.dump(d.payload.read(), fh,
+                                    protocol=pickle.HIGHEST_PROTOCOL)
+                    records[uid]["spilled"] = True
+        manifest = path / "session.json"
+        with open(manifest, "w") as fh:
+            json.dump({"session_id": self.session_id,
+                       "records": records}, fh)
+        return str(manifest)
+
+    def restore(self, directory: str) -> None:
+        """Restore drop states from a checkpoint into an already-built graph."""
+        path = Path(directory)
+        with open(path / "session.json") as fh:
+            data = json.load(fh)
+        records = data["records"]
+        for uid, rec in records.items():
+            d = self.drops.get(uid)
+            if d is None:
+                continue
+            if rec.get("spilled") and isinstance(d, DataDrop):
+                with open(path / "payloads" / f"{_safe(uid)}.pkl", "rb") as fh:
+                    d.payload.write(pickle.load(fh))
+            d.restore_record(rec)
+
+    def resume(self) -> None:
+        """Continue a restored session: re-fire completions for COMPLETED
+        data drops so not-yet-run consumers get triggered; reset apps that
+        were mid-flight."""
+        self.state = SessionState.RUNNING
+        self._rebuild_terminal()
+        from .drop import AppState
+        for d in self.drops.values():
+            if isinstance(d, AppDrop) and d.exec_state is AppState.RUNNING:
+                # was mid-flight at checkpoint time: re-run
+                d.exec_state = AppState.NOT_RUN
+                d._state = DropState.INITIALIZED
+        for d in list(self.drops.values()):
+            if isinstance(d, DataDrop) and d.state is DropState.COMPLETED:
+                for c in d.consumers:
+                    if (isinstance(c, AppDrop)
+                            and c.exec_state is AppState.NOT_RUN):
+                        c.on_input_completed(d)
+        # restart roots that never ran
+        for d in self.drops.values():
+            if (isinstance(d, AppDrop) and not d.inputs
+                    and d.exec_state is AppState.NOT_RUN):
+                d.trigger_root()
+            if (isinstance(d, DataDrop) and not d.producers
+                    and d.state is DropState.INITIALIZED):
+                d.set_completed()
+        self._check_finished()
+
+
+def _safe(uid: str) -> str:
+    return uid.replace("/", "_").replace("#", "_").replace(".", "_")

@@ -1,0 +1,390 @@
+"""LG -> Physical Graph Template translation (paper §3.4, step 2).
+
+"The second step unrolls the logical graph by first creating all necessary
+Drop specifications ... and second establishing directed edges amongst these
+Drop specifications."
+
+Unrolling model
+---------------
+Every *leaf* construct survives to a set of physical instances indexed by the
+**axes** contributed by its enclosing containers:
+
+* ``Scatter(K)``     -> axis of size K,
+* ``Loop(T)``        -> axis of size T,
+* ``Gather(g)``      -> collapses the innermost axis K -> K/g; each surviving
+  index q covers underlying coordinates ``[q*g, (q+1)*g)``,
+* ``GroupBy``        -> the corner turn: drops the *outer* scatter axis and
+  keeps the *inner* one; each instance consumes every outer coordinate.
+
+Edges between leaves connect instance-wise by **joining on underlying scatter
+coordinates**: shared axes align, a dst-range (Gather) fans in, a missing axis
+on the dst side (GroupBy / graph-level reduce) consumes the full range, a
+missing axis on the src side broadcasts.  Loop-carried Data nodes are aliased:
+iteration ``t``'s ``loop_entry`` *is* iteration ``t-1``'s ``loop_exit`` drop
+("new Data Drops created in each iteration", paper §2.3).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .constructs import Construct, Kind
+from .logical import GraphValidationError, LogicalGraph
+
+
+# ---------------------------------------------------------------------------
+# Physical Graph Template
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DropSpec:
+    """A Drop specification — a PGT node (not yet bound to resources)."""
+
+    uid: str
+    kind: str                      # "app" | "data"
+    construct: str                 # originating construct name
+    oid: Tuple[int, ...]           # instance coordinates
+    app: Optional[str] = None
+    payload_kind: str = "memory"
+    execution_time: float = 0.0
+    data_volume: float = 0.0
+    error_threshold: float = 0.0
+    params: Dict[str, Any] = field(default_factory=dict)
+    partition: int = -1            # logical partition (paper §3.4 step 3)
+    node: Optional[str] = None     # physical node (paper §3.5)
+
+    def weight(self) -> float:
+        """Cost-model weight: runtime for apps, volume for data."""
+        return self.execution_time if self.kind == "app" else 0.0
+
+
+@dataclass
+class PhysicalGraphTemplate:
+    name: str
+    drops: Dict[str, DropSpec] = field(default_factory=dict)
+    edges: List[Tuple[str, str, bool]] = field(default_factory=list)
+    _succ: Optional[Dict[str, List[str]]] = None
+    _pred: Optional[Dict[str, List[str]]] = None
+
+    def add_drop(self, spec: DropSpec) -> None:
+        if spec.uid in self.drops:
+            raise GraphValidationError(f"duplicate drop uid {spec.uid!r}")
+        self.drops[spec.uid] = spec
+        self._succ = self._pred = None
+
+    def add_edge(self, src: str, dst: str, streaming: bool = False) -> None:
+        self.edges.append((src, dst, streaming))
+        self._succ = self._pred = None
+
+    # -- adjacency --------------------------------------------------------------
+    def _build_adj(self) -> None:
+        succ: Dict[str, List[str]] = {u: [] for u in self.drops}
+        pred: Dict[str, List[str]] = {u: [] for u in self.drops}
+        for s, d, _ in self.edges:
+            succ[s].append(d)
+            pred[d].append(s)
+        self._succ, self._pred = succ, pred
+
+    def successors(self, uid: str) -> List[str]:
+        if self._succ is None:
+            self._build_adj()
+        return self._succ[uid]  # type: ignore[index]
+
+    def predecessors(self, uid: str) -> List[str]:
+        if self._pred is None:
+            self._build_adj()
+        return self._pred[uid]  # type: ignore[index]
+
+    def roots(self) -> List[str]:
+        if self._pred is None:
+            self._build_adj()
+        return [u for u, p in self._pred.items() if not p]  # type: ignore[union-attr]
+
+    def topological_order(self) -> List[str]:
+        if self._pred is None:
+            self._build_adj()
+        indeg = {u: len(p) for u, p in self._pred.items()}  # type: ignore[union-attr]
+        stack = [u for u, d in indeg.items() if d == 0]
+        order: List[str] = []
+        while stack:
+            u = stack.pop()
+            order.append(u)
+            for v in self._succ[u]:  # type: ignore[index]
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    stack.append(v)
+        if len(order) != len(self.drops):
+            raise GraphValidationError("physical graph contains a cycle")
+        return order
+
+    def __len__(self) -> int:
+        return len(self.drops)
+
+
+# ---------------------------------------------------------------------------
+# Axes
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Axis:
+    """A surviving instance axis of a leaf construct.
+
+    ``underlying`` is the contributing Scatter/Loop construct name;
+    ``size`` the number of surviving indices; ``group`` the number of
+    underlying coordinates covered by one surviving index (Gather collapse).
+    """
+
+    underlying: str
+    underlying_size: int
+    size: int
+    group: int = 1   # surviving index q covers [q*group, (q+1)*group)
+
+    def to_index(self, coord: int) -> int:
+        return coord // self.group
+
+    def to_coords(self, index: int) -> range:
+        return range(index * self.group, (index + 1) * self.group)
+
+
+class AxisResolver:
+    """Resolve the surviving axes of every leaf construct.
+
+    Scatter and Loop ancestors *contribute* axes.  Gather and GroupBy
+    *transform* the axes of their **incoming flow** (paper Fig. 3 draws them
+    as siblings consuming the scattered branches; they may equally be nested
+    inside the Scatter — both spellings resolve identically here):
+
+    * Gather(g): innermost incoming axis K -> K/g (fan-in g per instance),
+    * GroupBy:   corner turn — drop the outer of the last two incoming axes,
+      keep the inner (each instance consumes the full outer range).
+
+    The incoming flow of a container is taken from the edge whose source is
+    outside the container subtree and carries the most axes (the most
+    specific producer — broadcast side-inputs don't define the flow shape).
+    """
+
+    def __init__(self, lg: LogicalGraph) -> None:
+        self.lg = lg
+        self._leaf_cache: Dict[str, List[Axis]] = {}
+        self._cont_cache: Dict[Optional[str], List[Axis]] = {}
+        self._resolving: set = set()
+
+    # -- public ----------------------------------------------------------
+    def leaf_axes(self, leaf: str) -> List[Axis]:
+        if leaf not in self._leaf_cache:
+            c = self.lg.constructs[leaf]
+            self._leaf_cache[leaf] = list(self._container_axes(c.parent))
+        return self._leaf_cache[leaf]
+
+    # -- internals ----------------------------------------------------------
+    def _subtree_leaves(self, name: str) -> List[str]:
+        out: List[str] = []
+        stack = [name]
+        while stack:
+            n = stack.pop()
+            for ch in self.lg.children(n):
+                if ch.is_container():
+                    stack.append(ch.name)
+                else:
+                    out.append(ch.name)
+        return out
+
+    def _incoming_axes(self, name: str) -> List[Axis]:
+        inside = set(self._subtree_leaves(name))
+        best: Optional[List[Axis]] = None
+        for e in self.lg.edges:
+            if e.dst in inside and e.src not in inside:
+                axes = self.leaf_axes(e.src)
+                if best is None or len(axes) > len(best):
+                    best = axes
+        if best is None:
+            raise GraphValidationError(
+                f"{name!r} has no incoming flow to aggregate")
+        return list(best)
+
+    def _container_axes(self, name: Optional[str]) -> List[Axis]:
+        if name in self._cont_cache:
+            return self._cont_cache[name]
+        if name is None:
+            return []
+        if name in self._resolving:
+            raise GraphValidationError(
+                f"cyclic aggregation through container {name!r}")
+        self._resolving.add(name)
+        try:
+            c = self.lg.constructs[name]
+            if c.kind is Kind.SCATTER:
+                axes = self._container_axes(c.parent) + [
+                    Axis(c.name, c.num_of_copies, c.num_of_copies)]
+            elif c.kind is Kind.LOOP:
+                axes = self._container_axes(c.parent) + [
+                    Axis(c.name, c.num_of_iterations, c.num_of_iterations)]
+            elif c.kind is Kind.GATHER:
+                axes = self._incoming_axes(name)
+                if not axes:
+                    raise GraphValidationError(
+                        f"Gather {c.name!r} has no incoming axis to collapse")
+                last = axes[-1]
+                g = c.num_of_inputs
+                if last.size % g:
+                    raise GraphValidationError(
+                        f"Gather {c.name!r}: fan-in {g} does not divide "
+                        f"branch count {last.size}")
+                axes[-1] = Axis(last.underlying, last.underlying_size,
+                                last.size // g, last.group * g)
+            elif c.kind is Kind.GROUPBY:
+                axes = self._incoming_axes(name)
+                if len(axes) < 2:
+                    raise GraphValidationError(
+                        f"GroupBy {c.name!r} needs two incoming axes "
+                        "(nested Scatters)")
+                # corner turn: drop the outer axis, keep the inner
+                axes = axes[:-2] + [axes[-1]]
+            else:  # pragma: no cover - validated earlier
+                raise GraphValidationError(
+                    f"{name!r} is not a container")
+        finally:
+            self._resolving.discard(name)
+        self._cont_cache[name] = axes
+        return axes
+
+
+def leaf_axes(lg: LogicalGraph, leaf: str) -> List[Axis]:
+    """Compute the surviving axes of a leaf (convenience wrapper)."""
+    return AxisResolver(lg).leaf_axes(leaf)
+
+
+# ---------------------------------------------------------------------------
+# Unroll
+# ---------------------------------------------------------------------------
+
+
+def _uid(name: str, idx: Tuple[int, ...]) -> str:
+    return name if not idx else f"{name}#{'.'.join(map(str, idx))}"
+
+
+def unroll(lg: LogicalGraph) -> PhysicalGraphTemplate:
+    lg.validate()
+    pgt = PhysicalGraphTemplate(name=lg.name)
+
+    leaves = lg.leaves()
+    resolver = AxisResolver(lg)
+    axes_of: Dict[str, List[Axis]] = {
+        c.name: resolver.leaf_axes(c.name) for c in leaves}
+
+    # --- loop-carried aliasing ------------------------------------------------
+    # map (entry_name, loop_coord) -> exit construct name, for t > 0
+    carries: Dict[str, str] = {}          # entry -> exit
+    loop_axis_of: Dict[str, str] = {}     # entry -> loop construct name
+    for c in leaves:
+        if c.kind is Kind.DATA and c.loop_exit:
+            entry = c.params.get("carries")
+            if not entry or entry not in lg.constructs:
+                raise GraphValidationError(
+                    f"loop_exit {c.name!r} must name its 'carries' entry")
+            e = lg.constructs[entry]
+            if not e.loop_entry:
+                raise GraphValidationError(
+                    f"{entry!r} is not marked loop_entry")
+            carries[entry] = c.name
+            loops = [a for a in lg.ancestors(c.name) if a.kind is Kind.LOOP]
+            if not loops:
+                raise GraphValidationError(
+                    f"loop_exit {c.name!r} is outside any Loop")
+            loop_axis_of[entry] = loops[-1].name
+
+    def loop_pos(leaf: str) -> Optional[int]:
+        """Index of the carried loop axis within the leaf's axes."""
+        la = loop_axis_of.get(leaf)
+        if la is None:
+            return None
+        for i, ax in enumerate(axes_of[leaf]):
+            if ax.underlying == la:
+                return i
+        return None
+
+    # --- instantiate drops ------------------------------------------------------
+    # alias: (construct, idx) -> uid actually used
+    alias: Dict[Tuple[str, Tuple[int, ...]], str] = {}
+
+    for c in leaves:
+        axes = axes_of[c.name]
+        lp = loop_pos(c.name) if c.name in carries else None
+        for idx in itertools.product(*(range(a.size) for a in axes)):
+            if lp is not None and idx[lp] > 0:
+                # entry at iteration t>0 aliases exit at t-1
+                exit_name = carries[c.name]
+                prev = list(idx)
+                prev[lp] -= 1
+                # exit axes may be ordered differently; align by axis name
+                e_axes = axes_of[exit_name]
+                coordmap = {axes[i].underlying: prev[i]
+                            for i in range(len(axes))}
+                e_idx = tuple(coordmap[a.underlying] for a in e_axes)
+                alias[(c.name, idx)] = _uid(exit_name, e_idx)
+                continue
+            uid = _uid(c.name, idx)
+            if c.kind is Kind.DATA:
+                spec = DropSpec(uid=uid, kind="data", construct=c.name,
+                                oid=idx, payload_kind=c.payload_kind,
+                                data_volume=float(c.data_volume),
+                                params=dict(c.params))
+            else:
+                spec = DropSpec(uid=uid, kind="app", construct=c.name,
+                                oid=idx, app=c.app,
+                                execution_time=float(c.execution_time),
+                                error_threshold=c.error_threshold,
+                                params=dict(c.params))
+            pgt.add_drop(spec)
+
+    def resolve(name: str, idx: Tuple[int, ...]) -> str:
+        return alias.get((name, idx), _uid(name, idx))
+
+    # --- connect edges -----------------------------------------------------------
+    seen: set = set()
+    for e in lg.edges:
+        s_axes, d_axes = axes_of[e.src], axes_of[e.dst]
+        d_axis_names = {a.underlying for a in d_axes}
+        src_c = lg.constructs[e.src]
+        # loop_exit -> consumer outside the loop: only the FINAL iteration's
+        # exit drop leaves the loop (the paper's loop produces one result).
+        exit_pin: Dict[str, int] = {}
+        if src_c.kind is Kind.DATA and src_c.loop_exit:
+            loops = [a for a in lg.ancestors(e.src) if a.kind is Kind.LOOP]
+            if loops and loops[-1].name not in d_axis_names:
+                exit_pin[loops[-1].name] = loops[-1].num_of_iterations - 1
+        for d_idx in itertools.product(*(range(a.size) for a in d_axes)):
+            if (e.dst, d_idx) in alias:
+                # loop-entry instances at t>0 are pure aliases of exit[t-1];
+                # nothing is ever produced *into* them directly.
+                continue
+            # constraints: underlying coords covered by this dst instance
+            constraints: Dict[str, Iterable[int]] = {
+                a.underlying: a.to_coords(i)
+                for a, i in zip(d_axes, d_idx)}
+            # enumerate matching src coordinates per src axis
+            coord_ranges = []
+            for a in s_axes:
+                if a.underlying in exit_pin:
+                    coords: Iterable[int] = (exit_pin[a.underlying],)
+                else:
+                    coords = constraints.get(a.underlying,
+                                             range(a.underlying_size))
+                coord_ranges.append(coords)
+            dst_uid = resolve(e.dst, d_idx)
+            for combo in itertools.product(*coord_ranges):
+                s_idx = tuple(a.to_index(c)
+                              for a, c in zip(s_axes, combo))
+                src_uid = resolve(e.src, s_idx)
+                key = (src_uid, dst_uid, e.streaming)
+                if key in seen or src_uid == dst_uid:
+                    continue
+                seen.add(key)
+                pgt.add_edge(src_uid, dst_uid, e.streaming)
+    # sanity: the PGT must be a DAG (validated LGs always are, but aliasing
+    # of loop-carried drops could surface user errors)
+    pgt.topological_order()
+    return pgt

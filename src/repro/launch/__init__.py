@@ -1,0 +1,3 @@
+# launch: mesh construction, dry-run, train/serve drivers.
+# NOTE: importing this package must NOT touch jax device state —
+# dryrun.py sets XLA_FLAGS before any jax import.

@@ -1,0 +1,7 @@
+"""Model substrate: the 10 assigned architectures in functional JAX."""
+from .common import SHAPES, ArchConfig, ShapeConfig
+from .model import (decode_step, forward_train, init_cache, init_params,
+                    prefill)
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "decode_step",
+           "forward_train", "init_cache", "init_params", "prefill"]

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts layer: top-k routing + capacity dispatch.
+
+TPU-native adaptation of the paper's ``GroupBy`` corner-turn: the token ->
+expert shuffle is *exactly* DALiuGE's static re-grouping (keys known a
+priori: the router's top-k), realised here as a scatter/gather pair that
+GSPMD lowers to all-to-all when experts and tokens live on different mesh
+axes.
+
+Dispatch is group-wise (GShard-style): tokens are viewed as (groups, S, d)
+with per-group expert capacity C = S*top_k*capacity_factor/E.  Instead of the
+classic one-hot dispatch einsum — O(S*E*C) memory, infeasible at 1M tokens —
+we use scatter-add / gather with computed slot positions, which XLA handles
+as dynamic-update ops and shards cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import ctx as sctx
+from .common import ArchConfig, KeyGen, activation_fn, dense_init
+
+
+def init_moe(kg: KeyGen, cfg: ArchConfig, dtype: Any) -> Dict[str, jax.Array]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": dense_init(kg(), (d, e), jnp.float32, fan_in=d),
+        "w1": dense_init(kg(), (e, d, f), dtype, fan_in=d),
+        "w2": dense_init(kg(), (e, f, d), dtype, fan_in=f),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w3"] = dense_init(kg(), (e, d, f), dtype, fan_in=d)
+    return p
+
+
+def expert_capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_block(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig,
+              num_groups: Optional[int] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``num_groups``: dispatch groups (defaults to B).  Tokens within a group
+    share one capacity budget; groups shard over the data axes.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = num_groups if num_groups else b
+    tokens = b * s
+    assert tokens % g == 0, (tokens, g)
+    sg = tokens // g
+    xg = x.reshape(g, sg, d)
+    cap = expert_capacity(cfg, sg)
+
+    # --- routing ------------------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                 # (g, sg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch/GShard): E * mean(frac_i * prob_i)
+    me = probs.mean(axis=(0, 1))                          # (e,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], e)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # --- slot positions within each expert's capacity ----------------------------
+    # flatten the k assignment slots; earlier slots win capacity
+    flat_idx = idx.reshape(g, sg * k)                     # (g, n)
+    slot_one_hot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(slot_one_hot, axis=1) - 1  # (g, n, e)
+    pos = jnp.take_along_axis(
+        pos_in_expert, flat_idx[..., None], axis=-1)[..., 0]   # (g, n)
+    keep = pos < cap
+    # dropped tokens scatter out of bounds -> mode='drop' discards them
+    pos_safe = jnp.where(keep, pos, cap)
+
+    # --- dispatch: buffer[g, e, c, d] via scatter-add ------------------------------
+    token_src = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(sg), k)[None, :], (g, sg * k))
+    vals = jnp.take_along_axis(xg, token_src[..., None], axis=1)  # (g,n,d)
+    buf = jnp.zeros((g, e, cap, d), x.dtype)
+    g_ids = jnp.broadcast_to(jnp.arange(g)[:, None], (g, sg * k))
+    buf = buf.at[g_ids, flat_idx, pos_safe].add(vals, mode="drop")
+    # EP profile: tokens corner-turn to their experts here (GroupBy!)
+    buf = sctx.constrain(buf, "moe_buffer")
+
+    # --- expert FFN (E stacked experts; f-dim is TP-sharded) ----------------------
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w1"])
+    if cfg.activation in ("swiglu", "geglu"):
+        gate = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        hg = jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+        h = gate(h) * hg
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    out_buf = sctx.constrain(out_buf, "moe_buffer")
+
+    # --- combine: gather back + gate-weighted sum over k ---------------------------
+    gathered = out_buf[g_ids, flat_idx, pos_safe]          # (g, n, d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    gathered = gathered.reshape(g, sg, k, d)
+    y = jnp.einsum("gskd,gsk->gsd", gathered.astype(jnp.float32),
+                   gates).astype(x.dtype)
+    return y.reshape(b, s, d), aux

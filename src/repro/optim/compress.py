@@ -1,0 +1,45 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+At 1000+ nodes the gradient all-reduce dominates the collective term for
+small models; int8 quantisation cuts its bytes 4x (vs fp32) / 2x (vs bf16).
+Error feedback (residual carried to the next step) keeps SGD convergence —
+the property test checks the residual telescopes (the sum of decompressed
+gradients converges to the sum of true gradients).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_gradients(grads: Any) -> Tuple[Any, Any]:
+    """Per-tensor symmetric int8 quantisation: returns (q, scales)."""
+    def q(g):
+        g = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+        return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8), \
+            scale
+    out = jax.tree.map(q, grads)
+    qs = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return qs, scales
+
+
+def decompress_gradients(qs: Any, scales: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def error_feedback_update(grads: Any, residual: Any
+                          ) -> Tuple[Any, Any, Any]:
+    """(grads+residual) -> compress -> (q, scales, new_residual)."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qs, scales = compress_gradients(corrected)
+    recon = decompress_gradients(qs, scales)
+    new_residual = jax.tree.map(lambda c, d: c - d, corrected, recon)
+    return qs, scales, new_residual

@@ -1,0 +1,4 @@
+from .analyze import (collective_bytes_from_hlo, model_flops,
+                      roofline_terms)
+
+__all__ = ["collective_bytes_from_hlo", "model_flops", "roofline_terms"]

@@ -1,0 +1,108 @@
+"""Roofline-term extraction from compiled dry-run artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are parsed out of
+the (post-SPMD-partitioning) HLO text by summing operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+from ..models.common import ArchConfig, ShapeConfig
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  "bf16[16,256,512]{2,1,0}"  or "f32[128]"
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+# lines like:
+#   %all-reduce.1 = bf16[...]{...} all-reduce(...)
+#   %ar-start = (f32[2048,8512]{1,0}, f32[2048,8512]{1,0}) all-reduce-start(
+# (async "-start" ops have tuple (operand, result) shapes WITH spaces)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind.
+
+    ``-done`` ops are skipped (their ``-start`` is counted once).  Async
+    ``-start`` ops carry tuple (operand, result) shapes — halve them so both
+    sync and async forms count result bytes once.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        b = _shape_bytes(shape_str)
+        if shape_str.startswith("(") and suffix == "-start":
+            b //= 2
+        out[kind] += b
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens.
+
+    For decode shapes, D = batch tokens (one step).  Train triples the
+    forward (fwd+bwd); 6ND already assumes that for train; for inference
+    we use 2ND.
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   peak_flops: float, hbm_bw: float, ici_bw: float
+                   ) -> Dict[str, float]:
+    compute_s = flops / (chips * peak_flops)
+    memory_s = bytes_accessed / (chips * hbm_bw)
+    collective_s = collective_bytes / (chips * ici_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=lambda k: terms[k])
+    terms["dominant"] = dom  # type: ignore[assignment]
+    bound = max(compute_s, memory_s, collective_s)
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms

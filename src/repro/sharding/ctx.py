@@ -1,0 +1,102 @@
+"""Activation-sharding context: profile-driven constraints inside models.
+
+The model code stays profile-agnostic; it calls ``constrain(x, role)`` at a
+few strategic points (residual stream, MoE dispatch buffers, logits).  The
+active ``ShardProfile`` decides what PartitionSpec (if any) each role gets.
+Profiles are the §Perf hillclimbing lever:
+
+  baseline   - no explicit constraints (GSPMD propagation only)
+  dp_all     - batch sharded over (data x model): pure 256-way DP inside the
+               fixed mesh; params replicated, optimizer ZeRO-sharded.
+               For small archs whose TP would otherwise idle the model axis.
+  sp         - sequence parallelism: the residual stream's seq dim lives on
+               the model axis between blocks (reduce-scatter/all-gather
+               replaces all-reduce; elementwise bytes shard 16x).
+  ep         - expert parallelism on a derived (data, expert, tp) view of
+               the same 256 chips; MoE dispatch becomes a true all-to-all
+               (the paper's GroupBy corner-turn).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardProfile:
+    name: str = "baseline"
+    mesh: Optional[Mesh] = None
+    # axis-name groups (derived meshes rename these)
+    data_axes: Tuple[str, ...] = ("data",)
+    tp_axes: Tuple[str, ...] = ("model",)
+    expert_axis: Optional[str] = None
+
+
+_local = threading.local()
+
+
+def current() -> Optional[ShardProfile]:
+    return getattr(_local, "profile", None)
+
+
+@contextlib.contextmanager
+def use_profile(profile: Optional[ShardProfile]):
+    prev = getattr(_local, "profile", None)
+    _local.profile = profile
+    try:
+        yield
+    finally:
+        _local.profile = prev
+
+
+def _axis_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    """Apply the active profile's constraint for ``role`` (no-op outside)."""
+    prof = current()
+    if prof is None or prof.mesh is None:
+        return x
+    mesh = prof.mesh
+    da, tp = prof.data_axes, prof.tp_axes
+    dm = tuple(da) + tuple(tp)
+    spec: Optional[P] = None
+
+    if prof.name == "dp_all":
+        if role in ("residual", "logits") and x.ndim >= 2:
+            if x.shape[0] % _axis_size(mesh, dm) == 0:
+                spec = P(dm, *([None] * (x.ndim - 1)))
+        elif role == "moe_buffer" and x.ndim == 4:
+            # pin the dispatch buffer's group axis: without this GSPMD
+            # replicates the scatter destination (TB-scale all-reduces)
+            if x.shape[0] % _axis_size(mesh, dm) == 0:
+                spec = P(dm, None, None, None)
+    elif prof.name == "sp":
+        if role == "residual" and x.ndim == 3:
+            b, s, _ = x.shape
+            bs = da if b % _axis_size(mesh, da) == 0 else None
+            if s % _axis_size(mesh, tp) == 0:
+                spec = P(bs, tp, None)
+    elif prof.name == "ep":
+        e_ax = prof.expert_axis
+        if role == "moe_buffer" and x.ndim == 4 and e_ax:
+            g, e, c, d = x.shape
+            gs = da if g % _axis_size(mesh, da) == 0 else None
+            es = e_ax if e % mesh.shape[e_ax] == 0 else None
+            spec = P(gs, es, None, None)
+        if role == "residual" and x.ndim == 3:
+            b = x.shape[0]
+            if b % _axis_size(mesh, da) == 0:
+                spec = P(da, None, None)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

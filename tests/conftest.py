@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the real 1-CPU platform; only launch/dryrun.py requests 512 host devices.
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps against the jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_bhsd
+
+
+def rnd(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape,
+                              jnp.float32) * scale).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+        (1, 1, 1, 32, 32, 16),
+        (2, 4, 2, 64, 64, 32),       # GQA 2:1
+        (1, 8, 2, 128, 128, 64),     # GQA 4:1
+        (2, 2, 2, 48, 80, 32),       # non-square, non-block-multiple
+        (1, 4, 4, 17, 33, 8),        # ragged (padding path)
+    ])
+    def test_shapes_vs_oracle(self, b, hq, hkv, sq, sk, d):
+        q = rnd(0, (b, hq, sq, d), jnp.float32)
+        k = rnd(1, (b, hkv, sk, d), jnp.float32)
+        v = rnd(2, (b, hkv, sk, d), jnp.float32)
+        out = flash_attention_bhsd(q, k, v, causal=False,
+                                   block_q=32, block_k=32)
+        want = ref.mha_reference(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("causal,window,cap", [
+        (True, 0, 0.0), (True, 16, 0.0), (False, 0, 0.0),
+        (True, 0, 30.0), (True, 8, 50.0), (False, 0, 20.0),
+    ])
+    def test_mask_and_softcap_variants(self, causal, window, cap):
+        q = rnd(3, (2, 4, 64, 32), jnp.float32)
+        k = rnd(4, (2, 2, 64, 32), jnp.float32)
+        v = rnd(5, (2, 2, 64, 32), jnp.float32)
+        out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                                   logit_cap=cap, block_q=32, block_k=32)
+        want = ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 logit_cap=cap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("dtype,atol", [
+        (jnp.float32, 2e-5), (jnp.bfloat16, 2e-2),
+    ])
+    def test_dtypes(self, dtype, atol):
+        q = rnd(6, (1, 2, 64, 32), dtype, 0.5)
+        k = rnd(7, (1, 2, 64, 32), dtype, 0.5)
+        v = rnd(8, (1, 2, 64, 32), dtype, 0.5)
+        out = flash_attention_bhsd(q, k, v, block_q=32, block_k=32)
+        want = ref.mha_reference(q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want), atol=atol,
+            rtol=atol)
+
+    def test_block_size_invariance(self):
+        q = rnd(9, (1, 2, 128, 32), jnp.float32)
+        k = rnd(10, (1, 2, 128, 32), jnp.float32)
+        v = rnd(11, (1, 2, 128, 32), jnp.float32)
+        o1 = flash_attention_bhsd(q, k, v, block_q=32, block_k=32)
+        o2 = flash_attention_bhsd(q, k, v, block_q=64, block_k=128)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_under_jit(self):
+        q = rnd(12, (1, 2, 64, 16), jnp.float32)
+        k = rnd(13, (1, 1, 64, 16), jnp.float32)
+        v = rnd(14, (1, 1, 64, 16), jnp.float32)
+        f = jax.jit(lambda a, b, c: flash_attention_bhsd(
+            a, b, c, block_q=32, block_k=32))
+        np.testing.assert_allclose(
+            np.asarray(f(q, k, v)),
+            np.asarray(ref.mha_reference(q, k, v)), atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,h,s,p,n,chunk", [
+        (1, 1, 32, 8, 4, 8),
+        (2, 3, 64, 16, 8, 16),
+        (1, 2, 128, 32, 16, 32),
+        (2, 1, 64, 8, 8, 64),        # single chunk
+    ])
+    def test_shapes_vs_oracle(self, b, h, s, p, n, chunk):
+        x = rnd(0, (b, h, s, p), jnp.float32, 0.5)
+        dt = jax.nn.softplus(rnd(1, (b, h, s), jnp.float32))
+        a = -jnp.exp(rnd(2, (h,), jnp.float32, 0.3))
+        bb = rnd(3, (b, h, s, n), jnp.float32, 0.5)
+        cc = rnd(4, (b, h, s, n), jnp.float32, 0.5)
+        y, st = ssd_scan_bhsd(x, dt, a, bb, cc, chunk)
+        yr, str_ = ref.ssd_reference(x, dt, a, bb, cc)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_chunk_invariance(self):
+        x = rnd(5, (1, 2, 64, 8), jnp.float32, 0.5)
+        dt = jax.nn.softplus(rnd(6, (1, 2, 64), jnp.float32))
+        a = -jnp.exp(rnd(7, (2,), jnp.float32, 0.3))
+        bb = rnd(8, (1, 2, 64, 4), jnp.float32, 0.5)
+        cc = rnd(9, (1, 2, 64, 4), jnp.float32, 0.5)
+        y1, s1 = ssd_scan_bhsd(x, dt, a, bb, cc, 8)
+        y2, s2 = ssd_scan_bhsd(x, dt, a, bb, cc, 32)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_bf16(self):
+        x = rnd(10, (1, 2, 32, 8), jnp.bfloat16, 0.5)
+        dt = jax.nn.softplus(rnd(11, (1, 2, 32), jnp.float32))
+        a = -jnp.exp(rnd(12, (2,), jnp.float32, 0.3))
+        bb = rnd(13, (1, 2, 32, 4), jnp.bfloat16, 0.5)
+        cc = rnd(14, (1, 2, 32, 4), jnp.bfloat16, 0.5)
+        y, _ = ssd_scan_bhsd(x, dt, a, bb, cc, 8)
+        yr, _ = ref.ssd_reference(x.astype(jnp.float32), dt, a,
+                                  bb.astype(jnp.float32),
+                                  cc.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr), atol=5e-2, rtol=5e-2)
+
+
+class TestModelScanAgreement:
+    """The associative-scan jnp path must equal the sequential oracle and the
+    Pallas kernel — three implementations, one math."""
+
+    def test_three_way_agreement(self):
+        from repro.models.ssm import ssd_chunked
+        b, h, s, p, n = 2, 4, 64, 8, 4
+        x = rnd(20, (b, s, h, p), jnp.float32, 0.5)    # model layout
+        dt = jax.nn.softplus(rnd(21, (b, s, h), jnp.float32))
+        a = -jnp.exp(rnd(22, (h,), jnp.float32, 0.3))
+        bb = rnd(23, (b, s, 1, n), jnp.float32, 0.5)   # one group
+        cc = rnd(24, (b, s, 1, n), jnp.float32, 0.5)
+        y_model, st_model = ssd_chunked(x, dt, a, bb, cc, chunk=16)
+        # oracle layout
+        xt = jnp.transpose(x, (0, 2, 1, 3))
+        dtt = jnp.transpose(dt, (0, 2, 1))
+        bt = jnp.repeat(jnp.transpose(bb, (0, 2, 1, 3)), h, axis=1)
+        ct = jnp.repeat(jnp.transpose(cc, (0, 2, 1, 3)), h, axis=1)
+        y_ref, st_ref = ref.ssd_reference(xt, dtt, a, bt, ct)
+        y_kern, st_kern = ssd_scan_bhsd(xt, dtt, a, bt, ct, 16)
+        y_model_t = jnp.transpose(y_model, (0, 2, 1, 3))
+        np.testing.assert_allclose(np.asarray(y_model_t),
+                                   np.asarray(y_ref), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(y_kern),
+                                   np.asarray(y_ref), atol=2e-4, rtol=2e-4)
+        # states: model layout (B,H,N,P)
+        np.testing.assert_allclose(np.asarray(st_model),
+                                   np.asarray(st_ref), atol=2e-4, rtol=2e-4)

@@ -1,0 +1,187 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (DropState, NodeInfo, Pipeline, critical_path,
+                        map_partitions, min_time, simulate_makespan, unroll)
+from repro.dsl import GraphBuilder
+
+# ---------------------------------------------------------------------------
+# Random layered logical graphs
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def layered_lg(draw):
+    """src -> scatter(w1 -> d1 [-> w2 -> d2]) -> gather(r) -> out."""
+    n = draw(st.sampled_from([2, 3, 4, 6]))
+    fanin = draw(st.sampled_from([1, n]))
+    depth = draw(st.integers(1, 3))
+    g = GraphBuilder("h")
+    g.data("src")
+    prev = "src"
+    with g.scatter("sc", n):
+        for i in range(depth):
+            g.component(f"w{i}", app="noop",
+                        time=draw(st.floats(0.0, 0.01)))
+            g.data(f"d{i}", volume=draw(st.floats(0, 1e6)))
+    with g.gather("ga", fanin):
+        g.component("r", app="noop", time=0.001)
+    g.data("out")
+    g.connect("src", "w0")
+    for i in range(depth):
+        g.connect(f"w{i}", f"d{i}")
+        if i + 1 < depth:
+            g.connect(f"d{i}", f"w{i+1}")
+    g.connect(f"d{depth-1}", "r")
+    g.connect("r", "out")
+    return g.graph(), n, fanin, depth
+
+
+class TestUnrollProperties:
+    @given(layered_lg())
+    @settings(max_examples=25, deadline=None)
+    def test_instance_counts_and_dag(self, case):
+        lg, n, fanin, depth = case
+        pgt = unroll(lg)
+        # scatter leaves have n instances; gather r has n/fanin
+        for i in range(depth):
+            assert sum(1 for u in pgt.drops
+                       if u.split("#")[0] == f"w{i}") == n
+        assert sum(1 for u in pgt.drops
+                   if u.split("#")[0] == "r") == n // fanin
+        order = pgt.topological_order()      # raises on cycles
+        assert len(order) == len(pgt)
+
+    @given(layered_lg())
+    @settings(max_examples=25, deadline=None)
+    def test_every_nonroot_has_producer_path_from_src(self, case):
+        lg, *_ = case
+        pgt = unroll(lg)
+        roots = set(pgt.roots())
+        assert roots == {"src"}
+
+    @given(layered_lg(), st.integers(1, 8))
+    @settings(max_examples=15, deadline=None)
+    def test_partition_invariants(self, case, dop):
+        lg, *_ = case
+        pgt = unroll(lg)
+        res = min_time(pgt, dop=dop)
+        # every drop assigned exactly one partition id in [0, n)
+        parts = {s.partition for s in pgt.drops.values()}
+        assert all(p >= 0 for p in parts)
+        assert res.num_partitions == len(parts)
+        # makespan >= pure-compute critical path
+        cp = critical_path(pgt, bandwidth=1e30, partitioned=False)
+        assert res.makespan >= cp - 1e-9
+
+    @given(layered_lg(), st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_mapping_total(self, case, m):
+        lg, *_ = case
+        pgt = unroll(lg)
+        min_time(pgt, dop=4)
+        nodes = [NodeInfo(f"n{i}") for i in range(m)]
+        assign = map_partitions(pgt, nodes)
+        assert set(assign.keys()) == {s.partition
+                                      for s in pgt.drops.values()}
+        assert all(v in {x.name for x in nodes} for v in assign.values())
+
+
+class TestExecutionProperties:
+    @given(st.integers(2, 8), st.integers(1, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_execution_always_completes(self, n, nodes):
+        g = GraphBuilder("e")
+        g.data("src")
+        with g.scatter("sc", n):
+            g.component("w", app="identity", time=0.0)
+            g.data("d")
+        with g.gather("ga", n):
+            g.component("r", app="identity", time=0.0)
+        g.data("out")
+        g.chain("src", "w", "d", "r", "out")
+        with Pipeline(num_nodes=nodes) as p:
+            rep = p.run(g.graph(), timeout=30, inputs={"src": 1})
+            assert rep.ok, rep.errors
+            # invariant: a COMPLETED app implies all its inputs resolved
+            from repro.core import AppDrop
+            for d in p.session.drops.values():
+                if isinstance(d, AppDrop) and d.state is DropState.COMPLETED:
+                    for inp in d.inputs:
+                        assert inp.state in (DropState.COMPLETED,
+                                             DropState.ERROR,
+                                             DropState.EXPIRED,
+                                             DropState.DELETED)
+
+
+class TestCompressionProperties:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_error_feedback_telescopes(self, seed, dim):
+        """sum(decompressed) + residual == sum(true grads) exactly."""
+        from repro.optim import (decompress_gradients,
+                                 error_feedback_update)
+        rng = np.random.default_rng(seed)
+        grads = [jnp.asarray(rng.normal(size=(dim,)), jnp.float32)
+                 for _ in range(5)]
+        residual = jnp.zeros((dim,), jnp.float32)
+        total_true = jnp.zeros((dim,), jnp.float32)
+        total_sent = jnp.zeros((dim,), jnp.float32)
+        for gr in grads:
+            q, s, residual = error_feedback_update(gr, residual)
+            total_sent = total_sent + decompress_gradients(q, s)
+            total_true = total_true + gr
+        np.testing.assert_allclose(
+            np.asarray(total_sent + residual), np.asarray(total_true),
+            rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_quantisation_bounded_error(self, seed):
+        from repro.optim import compress_gradients, decompress_gradients
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(128,)) * 10, jnp.float32)
+        q, s = compress_gradients(g)
+        back = decompress_gradients(q, s)
+        max_err = float(jnp.max(jnp.abs(back - g)))
+        assert max_err <= float(s) / 2 + 1e-6    # half a quantisation step
+
+
+class TestPayloadProperties:
+    @given(st.lists(st.integers(), min_size=1, max_size=5))
+    @settings(max_examples=20, deadline=None)
+    def test_write_once_read_many(self, values):
+        from repro.core import MemoryPayload, PayloadError
+        p = MemoryPayload()
+        p.write(values[0])
+        p.seal()
+        for _ in range(3):
+            assert p.read() == values[0]
+        for v in values[1:]:
+            with pytest.raises(PayloadError):
+                p.write(v)
+
+
+class TestDataPipelineProperties:
+    @given(st.integers(0, 1000), st.integers(0, 32), st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_deterministic_batches(self, seed, shard, index):
+        from repro.data import synthetic_batch
+        a = synthetic_batch(seed, shard, index, 2, 16, 100)
+        b = synthetic_batch(seed, shard, index, 2, 16, 100)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+        assert a["tokens"].min() >= 0 and a["tokens"].max() < 100
+
+    @given(st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_shards_differ(self, seed):
+        from repro.data import synthetic_batch
+        a = synthetic_batch(seed, 0, 0, 2, 32, 1000)
+        b = synthetic_batch(seed, 1, 0, 2, 32, 1000)
+        assert not np.array_equal(a["tokens"], b["tokens"])

@@ -1,0 +1,77 @@
+"""Roofline analysis unit tests (HLO collective parsing incl. async forms)."""
+import pytest
+
+from repro.configs import get_config
+from repro.models.common import SHAPES
+from repro.roofline import (collective_bytes_from_hlo, model_flops,
+                            roofline_terms)
+
+HLO_SAMPLE = """
+HloModule jit_train_step
+  %all-reduce = s32[] all-reduce(%x), replica_groups=[1,256]<=[256]
+  %ag.1 = f32[64]{0} all-gather(%y), channel_id=10
+  %ar2 = (f32[1024,16]{1,0}, f32[1024,16]{1,0}) all-reduce-start(%z)
+  %ar2d = f32[1024,16]{1,0} all-reduce-done(%ar2)
+  %cp = bf16[128,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = bf16[8,16,64]{2,1,0} all-to-all(%v), dimensions={0}
+  %rs = f32[512]{0} reduce-scatter(%u), dimensions={0}
+  %not-a-collective = f32[4]{0} add(%a, %b)
+"""
+
+
+class TestCollectiveParse:
+    def test_sync_and_async_counted_once(self):
+        out = collective_bytes_from_hlo(HLO_SAMPLE)
+        assert out["all-reduce"] == 4 + 1024 * 16 * 4   # s32[] + HALF tuple
+        assert out["all-gather"] == 64 * 4
+        assert out["collective-permute"] == 128 * 32 * 2
+        assert out["all-to-all"] == 8 * 16 * 64 * 2
+        assert out["reduce-scatter"] == 512 * 4
+        assert out["total"] == sum(out[k] for k in
+                                   ("all-gather", "all-reduce",
+                                    "reduce-scatter", "all-to-all",
+                                    "collective-permute"))
+
+    def test_done_ops_skipped(self):
+        only_done = "%d = f32[100]{0} all-reduce-done(%s)\n"
+        assert collective_bytes_from_hlo(only_done)["all-reduce"] == 0
+
+
+class TestRooflineTerms:
+    def test_dominant_and_fraction(self):
+        t = roofline_terms(flops=197e12 * 256, bytes_accessed=0.0,
+                           collective_bytes=0.0, chips=256,
+                           peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+        assert t["dominant"] == "compute_s"
+        assert abs(t["compute_s"] - 1.0) < 1e-9
+        assert abs(t["roofline_fraction"] - 1.0) < 1e-9
+
+    def test_memory_bound_case(self):
+        t = roofline_terms(flops=1e12, bytes_accessed=819e9 * 256 * 10,
+                           collective_bytes=0, chips=256,
+                           peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+        assert t["dominant"] == "memory_s"
+        assert t["roofline_fraction"] < 0.01
+
+
+class TestModelFlops:
+    def test_train_is_6nd(self):
+        cfg = get_config("codeqwen15_7b")
+        sh = SHAPES["train_4k"]
+        mf = model_flops(cfg, sh)
+        assert mf == pytest.approx(
+            6.0 * cfg.param_count() * sh.global_batch * sh.seq_len)
+
+    def test_moe_uses_active_params(self):
+        cfg = get_config("grok_1_314b")
+        sh = SHAPES["train_4k"]
+        mf = model_flops(cfg, sh)
+        assert mf == pytest.approx(
+            6.0 * cfg.active_param_count() * sh.global_batch * sh.seq_len)
+        assert cfg.active_param_count() < cfg.param_count() / 2
+
+    def test_decode_counts_one_token_per_seq(self):
+        cfg = get_config("mamba2_1_3b")
+        sh = SHAPES["decode_32k"]
+        assert model_flops(cfg, sh) == pytest.approx(
+            2.0 * cfg.param_count() * sh.global_batch)

@@ -1,0 +1,231 @@
+"""Unit tests: constructs, validation, unrolling, partitioning, mapping, io."""
+import pytest
+
+from repro.core import (Construct, GraphValidationError, Kind,
+                        LogicalGraphTemplate, NodeInfo, critical_path,
+                        leaf_axes, load_lgt, load_pgt, map_partitions,
+                        min_res, min_time, partition_stats, save_lgt,
+                        save_pgt, simulate_makespan, unroll)
+from repro.dsl import GraphBuilder
+
+
+def lg_scatter(n=4):
+    g = GraphBuilder("t")
+    g.data("src")
+    with g.scatter("sc", n):
+        g.component("w", app="noop", time=1.0)
+        g.data("d", volume=1e6)
+    with g.gather("ga", n):
+        g.component("r", app="noop", time=2.0)
+    g.data("out")
+    g.chain("src", "w", "d", "r", "out")
+    return g.graph()
+
+
+class TestValidation:
+    def test_cycle_rejected(self):
+        g = GraphBuilder("c")
+        g.data("a")
+        g.component("f", app="noop")
+        g.data("b")
+        g.component("h", app="noop")
+        g.chain("a", "f", "b", "h")
+        g.connect("h", "a")
+        with pytest.raises(GraphValidationError, match="cycle"):
+            g.graph()
+
+    def test_linking_rule(self):
+        """Data<->Component only (paper §3.2)."""
+        g = GraphBuilder("l")
+        g.data("a")
+        g.data("b")
+        g.lgt.edges.append(type(g.lgt.edges)() if False else None)
+        from repro.core import LogicalEdge
+        g.lgt.edges = [LogicalEdge("a", "b")]
+        with pytest.raises(GraphValidationError, match="linking rule"):
+            g.lgt.validate()
+
+    def test_gather_fanin_must_divide(self):
+        g = GraphBuilder("g")
+        g.data("src")
+        with g.scatter("sc", 4):
+            g.component("w", app="noop")
+            g.data("d")
+        with g.gather("ga", 3):
+            g.component("r", app="noop")
+        g.chain("src", "w", "d", "r")
+        with pytest.raises(GraphValidationError, match="divide"):
+            unroll(g.graph())
+
+    def test_groupby_needs_nested_scatters(self):
+        g = GraphBuilder("gb")
+        g.data("src")
+        with g.scatter("sc", 4):
+            g.component("w", app="noop")
+            g.data("d")
+        with g.group_by("grp"):
+            g.component("c", app="noop")
+        g.chain("src", "w", "d", "c")
+        with pytest.raises(GraphValidationError, match="two incoming axes"):
+            unroll(g.graph())
+
+    def test_parametrise_unknown_param(self):
+        lgt = LogicalGraphTemplate(name="p", parameters={"n": 2})
+        with pytest.raises(GraphValidationError, match="unknown parameters"):
+            lgt.parametrise(bogus=1)
+
+    def test_parametrised_scatter_width(self):
+        g = GraphBuilder("pw", parameters={"n": 2})
+        g.data("src")
+        with g.scatter("sc", 2) as sc:
+            sc.params["$num_of_copies"] = "n"
+            g.component("w", app="noop")
+            g.data("d")
+        g.chain("src", "w", "d")
+        lg = g.lgt.parametrise(n=8)
+        pgt = unroll(lg)
+        assert sum(1 for u in pgt.drops if u.startswith("w#")) == 8
+
+
+class TestUnroll:
+    def test_instance_counts(self):
+        pgt = unroll(lg_scatter(4))
+        # src 1, w 4, d 4, r 1, out 1
+        assert len(pgt) == 11
+        kinds = {u: s.kind for u, s in pgt.drops.items()}
+        assert sum(1 for k in kinds.values() if k == "app") == 5
+
+    def test_edge_counts(self):
+        pgt = unroll(lg_scatter(4))
+        # src->w x4 (broadcast), w->d x4, d->r x4 (fan-in), r->out x1
+        assert len(pgt.edges) == 13
+
+    def test_axes_resolution(self):
+        lg = lg_scatter(4)
+        assert [a.size for a in leaf_axes(lg, "w")] == [4]
+        assert [a.size for a in leaf_axes(lg, "r")] == [1]
+        assert leaf_axes(lg, "src") == []
+
+    def test_nested_scatter_product(self):
+        g = GraphBuilder("n")
+        with g.scatter("a", 3):
+            with g.scatter("b", 5):
+                g.component("w", app="noop")
+                g.data("d")
+        g.connect("w", "d")
+        pgt = unroll(g.graph())
+        assert sum(1 for u in pgt.drops if u.startswith("w#")) == 15
+
+    def test_groupby_cornerturn_edges(self):
+        g = GraphBuilder("c")
+        with g.scatter("t", 3):
+            with g.scatter("f", 2):
+                g.component("e", app="noop")
+                g.data("pt")
+        with g.group_by("gb"):
+            g.component("col", app="noop")
+        g.chain("e", "pt", "col")
+        pgt = unroll(g.graph())
+        cols = [u for u in pgt.drops if u.startswith("col")]
+        assert len(cols) == 2
+        for cu in cols:
+            assert len(pgt.predecessors(cu)) == 3
+
+    def test_pgt_is_dag(self):
+        pgt = unroll(lg_scatter(8))
+        order = pgt.topological_order()
+        assert len(order) == len(pgt)
+
+
+class TestPartition:
+    def test_min_time_respects_dop(self):
+        pgt = unroll(lg_scatter(8))
+        res = min_time(pgt, dop=2)
+        from repro.core.partition import _partition_dop
+        parts = {}
+        for uid, s in pgt.drops.items():
+            parts.setdefault(s.partition, set()).add(uid)
+        for members in parts.values():
+            assert _partition_dop(pgt, members) <= 2
+
+    def test_min_time_not_worse_than_trivial(self):
+        pgt = unroll(lg_scatter(8))
+        for i, s in enumerate(pgt.drops.values()):
+            s.partition = i
+        trivial = simulate_makespan(pgt, dop=4)
+        res = min_time(pgt, dop=4)
+        assert res.makespan <= trivial + 1e-9
+
+    def test_min_res_meets_deadline(self):
+        pgt = unroll(lg_scatter(8))
+        loose = critical_path(pgt, partitioned=False) * 10
+        res = min_res(pgt, deadline=loose, dop=4)
+        assert res.makespan <= loose * (1 + 1e-6)
+
+    def test_min_res_fewer_partitions_when_loose(self):
+        pgt1 = unroll(lg_scatter(8))
+        tight = min_res(pgt1, deadline=0.0, dop=2)     # clamped to critical path
+        pgt2 = unroll(lg_scatter(8))
+        loose = min_res(pgt2, deadline=1e9, dop=2)
+        assert loose.num_partitions <= tight.num_partitions
+
+    def test_makespan_at_least_compute_critical_path(self):
+        # lower bound: zero-communication critical path (pure compute)
+        pgt = unroll(lg_scatter(8))
+        min_time(pgt, dop=4)
+        cp = critical_path(pgt, bandwidth=1e30, partitioned=False)
+        assert simulate_makespan(pgt, dop=4) >= cp - 1e-9
+
+
+class TestMapping:
+    def test_all_partitions_assigned(self):
+        pgt = unroll(lg_scatter(8))
+        min_time(pgt, dop=4)
+        nodes = [NodeInfo(f"n{i}") for i in range(3)]
+        assign = map_partitions(pgt, nodes)
+        assert set(assign) == {s.partition for s in pgt.drops.values()}
+        assert all(s.node is not None for s in pgt.drops.values())
+
+    def test_dead_nodes_excluded(self):
+        pgt = unroll(lg_scatter(8))
+        min_time(pgt, dop=4)
+        nodes = [NodeInfo("n0"), NodeInfo("n1", alive=False)]
+        assign = map_partitions(pgt, nodes)
+        assert set(assign.values()) == {"n0"}
+
+    def test_balanced_load(self):
+        g = GraphBuilder("bal")
+        g.data("src")
+        with g.scatter("sc", 16):
+            g.component("w", app="noop", time=1.0)
+            g.data("d")
+        g.chain("src", "w", "d")
+        pgt = unroll(g.graph())
+        min_time(pgt, dop=1)
+        nodes = [NodeInfo(f"n{i}") for i in range(4)]
+        map_partitions(pgt, nodes)
+        loads = {}
+        for s in pgt.drops.values():
+            loads[s.node] = loads.get(s.node, 0.0) + s.weight()
+        assert max(loads.values()) <= 2 * min(loads.values()) + 1.0
+
+
+class TestGraphIO:
+    def test_lgt_roundtrip(self, tmp_path):
+        lg = lg_scatter(4)
+        path = str(tmp_path / "g.json.gz")
+        save_lgt(lg, path)
+        back = load_lgt(path)
+        assert set(back.constructs) == set(lg.constructs)
+        assert len(back.edges) == len(lg.edges)
+
+    def test_pgt_roundtrip_streaming(self, tmp_path):
+        pgt = unroll(lg_scatter(8))
+        min_time(pgt, dop=4)
+        path = str(tmp_path / "p.jsonl.gz")
+        save_pgt(pgt, path, chunk=3)
+        back = load_pgt(path)
+        assert len(back) == len(pgt)
+        assert len(back.edges) == len(pgt.edges)
+        assert back.drops["w#0"].partition == pgt.drops["w#0"].partition
+        assert back.topological_order()
