@@ -2,14 +2,19 @@
 
 Reports, for a representative imaging-like graph: makespan and partition
 count for (a) no partitioning (every drop its own partition = all edges
-remote), (b) min_time, (c) min_res under a 2x-critical-path deadline.
+remote), (b) min_time, (c) min_res under a 2x-critical-path deadline —
+for BOTH translate paths: the seed dict path (``unroll_dict`` +
+simulation-validated merging) and the array path (``CompiledPGT`` CSR +
+union-find merging), so quality parity and throughput are visible side
+by side.
 """
 from __future__ import annotations
 
+import time
 from typing import List, Tuple
 
 from repro.core import (critical_path, min_res, min_time, partition_stats,
-                        simulate_makespan, unroll)
+                        simulate_makespan, unroll, unroll_dict)
 from repro.dsl import GraphBuilder
 
 
@@ -37,29 +42,33 @@ def imaging_like_lg(days: int = 6, chans: int = 8):
 
 def run(dop: int = 8) -> List[Tuple[str, float, str]]:
     rows = []
-    pgt = unroll(imaging_like_lg())
-    n = len(pgt)
-    for i, s in enumerate(pgt.drops.values()):
-        s.partition = i
-    base = simulate_makespan(pgt, dop)
-    rows.append((f"makespan_none[n={n}]", base * 1e6, "partitions=%d" % n))
+    for label, do_unroll in (("csr", unroll), ("dict", unroll_dict)):
+        pgt = do_unroll(imaging_like_lg())
+        n = len(pgt)
+        for i, s in enumerate(pgt.drops.values()):
+            s.partition = i
+        base = simulate_makespan(pgt, dop)
+        rows.append((f"makespan_none_{label}[n={n}]", base * 1e6,
+                     "partitions=%d" % n))
 
-    pgt_t = unroll(imaging_like_lg())
-    rt = min_time(pgt_t, dop=dop)
-    st = partition_stats(pgt_t)
-    rows.append((f"makespan_min_time[n={n}]", rt.makespan * 1e6,
-                 f"partitions={rt.num_partitions};"
-                 f"cross_GB={st['cross_volume']/1e9:.2f};"
-                 f"speedup={base/max(rt.makespan,1e-9):.2f}x"))
+        t0 = time.monotonic()
+        pgt_t = do_unroll(imaging_like_lg())
+        rt = min_time(pgt_t, dop=dop)
+        t_tr = time.monotonic() - t0
+        st = partition_stats(pgt_t)
+        rows.append((f"makespan_min_time_{label}[n={n}]", rt.makespan * 1e6,
+                     f"partitions={rt.num_partitions};"
+                     f"cross_GB={st['cross_volume']/1e9:.2f};"
+                     f"speedup={base/max(rt.makespan,1e-9):.2f}x;"
+                     f"translate_drops_per_s={n/t_tr:.0f}"))
 
-    pgt_r = unroll(imaging_like_lg())
-    deadline = critical_path(pgt_r, partitioned=False) * 2
-    rr = min_res(pgt_r, deadline=deadline, dop=dop)
-    sr = partition_stats(pgt_r)
-    rows.append((f"makespan_min_res[n={n}]", rr.makespan * 1e6,
-                 f"partitions={rr.num_partitions};"
-                 f"deadline={deadline*1e6:.0f};"
-                 f"meets={rr.makespan <= deadline * 1.000001}"))
+        pgt_r = do_unroll(imaging_like_lg())
+        deadline = critical_path(pgt_r, partitioned=False) * 2
+        rr = min_res(pgt_r, deadline=deadline, dop=dop)
+        rows.append((f"makespan_min_res_{label}[n={n}]", rr.makespan * 1e6,
+                     f"partitions={rr.num_partitions};"
+                     f"deadline={deadline*1e6:.0f};"
+                     f"meets={rr.makespan <= deadline * 1.000001}"))
     return rows
 
 

@@ -1,17 +1,40 @@
-"""Translation cost: unroll + partition time vs logical-graph width (§3.4).
+"""Translation throughput: unroll + partition vs logical-graph width (§3.4).
 
-The paper streams JSON and unrolls logical graphs into millions of drops;
-here we measure our unroll + min_time partitioning throughput
-(drops/second) as the physical graph grows.
+The paper streams JSON and unrolls logical graphs into millions of drops.
+This benchmark compares the two translate paths:
+
+* **dict** — the seed path: dict-of-``DropSpec`` + per-edge Python hashing
+  (``unroll_dict`` + the simulation-validated ``min_time``),
+* **csr**  — the array path: vectorized unroll straight into CSR arrays
+  (``CompiledPGT``) + the union-find/critical-path ``min_time``,
+
+reporting drops/second for each, plus a million-drop tier that only the
+array path can reach (``--drops 1000000``).
+
+Usage:
+  python benchmarks/bench_translate.py              # full comparison suite
+  python benchmarks/bench_translate.py --width 10000  # CSR smoke tier only
+  python benchmarks/bench_translate.py --drops 2000000
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import List, Tuple
 
-from repro.core import min_time, unroll
+from repro.core import min_time, unroll, unroll_dict
 from repro.core.graph_io import load_pgt, save_pgt
 from repro.dsl import GraphBuilder
+
+# drops per unit width in make_lg (src + width * (depth apps + depth data))
+DROPS_PER_WIDTH = 6
+
+# scaled-down merge-trial budget for the dict path at the 50k-width
+# comparison tier: the seed benchmark used max_trials=500 at width <= 2000;
+# each trial re-simulates the full graph, which at 300k drops costs ~1s, so
+# 500 trials would take ~10 minutes.  30 trials keeps the bench honest and
+# finishable; the reported drops/s is correspondingly *optimistic* for dict.
+DICT_MIN_TIME_TRIALS = 30
 
 
 def make_lg(width: int, depth: int = 3):
@@ -29,29 +52,75 @@ def make_lg(width: int, depth: int = 3):
     return g.graph()
 
 
-def run(widths=(1000, 10000, 50000),
-        partition_widths=(500, 2000)) -> List[Tuple[str, float, str]]:
-    rows = []
+Row = Tuple[str, float, str]
+
+
+def _unroll_rows(widths=(1000, 10000, 50000)) -> List[Row]:
+    rows: List[Row] = []
     for width in widths:
         lg = make_lg(width)
         t0 = time.monotonic()
-        pgt = unroll(lg)
-        t_unroll = time.monotonic() - t0
-        n = len(pgt)
-        rows.append((f"unroll_us_per_drop[n={n}]",
-                     1e6 * t_unroll / n, f"total_s={t_unroll:.3f}"))
-    for width in partition_widths:
-        pgt = unroll(make_lg(width))
-        n = len(pgt)
+        old = unroll_dict(lg)
+        t_dict = time.monotonic() - t0
+        n = len(old)
+        del old
         t1 = time.monotonic()
-        min_time(pgt, dop=8, max_trials=500)
-        t_part = time.monotonic() - t1
-        rows.append((f"partition_us_per_drop[n={n}]",
-                     1e6 * t_part / n,
-                     f"total_s={t_part:.3f};max_trials=500"))
+        new = unroll(lg)
+        t_csr = time.monotonic() - t1
+        assert len(new) == n
+        rows.append((f"unroll_dict_drops_per_s[n={n}]", n / t_dict,
+                     f"total_s={t_dict:.3f}"))
+        rows.append((f"unroll_csr_drops_per_s[n={n}]", n / t_csr,
+                     f"total_s={t_csr:.3f};speedup={t_dict / t_csr:.1f}x"))
+    return rows
+
+
+def _translate_rows(width: int = 50000) -> List[Row]:
+    """unroll + min_time, old vs new, at the seed path's width ceiling."""
+    rows: List[Row] = []
+    lg = make_lg(width)
+
+    t0 = time.monotonic()
+    old = unroll_dict(lg)
+    min_time(old, dop=8, max_trials=DICT_MIN_TIME_TRIALS)
+    t_dict = time.monotonic() - t0
+    n = len(old)
+    del old
+    rows.append((f"translate_dict_drops_per_s[w={width};n={n}]", n / t_dict,
+                 f"total_s={t_dict:.3f};max_trials={DICT_MIN_TIME_TRIALS}"))
+
+    t1 = time.monotonic()
+    new = unroll(lg)
+    res = min_time(new, dop=8)
+    t_csr = time.monotonic() - t1
+    rows.append((f"translate_csr_drops_per_s[w={width};n={n}]", n / t_csr,
+                 f"total_s={t_csr:.3f};partitions={res.num_partitions};"
+                 f"speedup={t_dict / t_csr:.1f}x"))
+    return rows
+
+
+def _million_row(target_drops: int = 1_000_000) -> List[Row]:
+    """The paper's regime: a million-drop unroll + min_time partition."""
+    width = max(target_drops // DROPS_PER_WIDTH, 1)
+    lg = make_lg(width)
+    t0 = time.monotonic()
+    pgt = unroll(lg)
+    t_unroll = time.monotonic() - t0
+    n = len(pgt)
+    t1 = time.monotonic()
+    res = min_time(pgt, dop=8)
+    t_total = time.monotonic() - t0
+    return [(f"translate_csr_drops_per_s[n={n}]", n / t_total,
+             f"unroll_s={t_unroll:.3f};partition_s={time.monotonic()-t1:.3f};"
+             f"partitions={res.num_partitions};"
+             f"makespan={res.makespan:.4f}")]
+
+
+def _io_rows(width: int = 10000) -> List[Row]:
     # streaming (de)serialisation throughput (paper §3.7 ijson experiment)
-    pgt = unroll(make_lg(10000))
-    import tempfile, os
+    pgt = unroll(make_lg(width))
+    import os
+    import tempfile
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "p.jsonl.gz")
         t0 = time.monotonic()
@@ -60,15 +129,45 @@ def run(widths=(1000, 10000, 50000),
         t1 = time.monotonic()
         load_pgt(path)
         t_load = time.monotonic() - t1
-    rows.append((f"pgt_save_us_per_drop[n={len(pgt)}]",
-                 1e6 * t_save / len(pgt), f"total_s={t_save:.3f}"))
-    rows.append((f"pgt_load_us_per_drop[n={len(pgt)}]",
-                 1e6 * t_load / len(pgt), f"total_s={t_load:.3f}"))
+    return [
+        (f"pgt_save_us_per_drop[n={len(pgt)}]",
+         1e6 * t_save / len(pgt), f"total_s={t_save:.3f}"),
+        (f"pgt_load_us_per_drop[n={len(pgt)}]",
+         1e6 * t_load / len(pgt), f"total_s={t_load:.3f}"),
+    ]
+
+
+def run(widths=(1000, 10000, 50000), compare_width: int = 50000,
+        million_drops: int = 1_000_000) -> List[Row]:
+    rows = _unroll_rows(widths)
+    rows += _translate_rows(compare_width)
+    rows += _million_row(million_drops)
+    rows += _io_rows()
     return rows
 
 
+def smoke(width: int) -> List[Row]:
+    """CSR-only quick tier (CI: ``--width 10000``)."""
+    lg = make_lg(width)
+    t0 = time.monotonic()
+    pgt = unroll(lg)
+    res = min_time(pgt, dop=8)
+    t = time.monotonic() - t0
+    n = len(pgt)
+    return [(f"translate_csr_drops_per_s[w={width};n={n}]", n / t,
+             f"total_s={t:.3f};partitions={res.num_partitions}")]
+
+
 def main() -> None:
-    for name, val, extra in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--width", type=int, default=None,
+                    help="CSR-only smoke run at this logical width")
+    ap.add_argument("--drops", type=int, default=1_000_000,
+                    help="target physical-graph size for the big tier")
+    args = ap.parse_args()
+    rows = smoke(args.width) if args.width else run(
+        million_drops=args.drops)
+    for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
 
 

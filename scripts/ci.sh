@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + a translate-throughput smoke tier.
+#
+#   ./scripts/ci.sh            # tests + smoke bench
+#   SKIP_BENCH=1 ./scripts/ci.sh   # tests only
+#
+# Dev deps (optional; the suite collects cleanly without hypothesis):
+#   pip install -r requirements-dev.txt
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+    echo "== translate smoke bench (width 10000) =="
+    python benchmarks/bench_translate.py --width 10000
+fi

@@ -19,21 +19,23 @@ from .managers import (DataIslandDropManager, MasterDropManager,
 from .mapping import NodeInfo, map_partitions
 from .partition import PartitionResult, min_res, min_time
 from .schedule import critical_path, partition_stats, simulate_makespan
+from .pgt import CompiledPGT, DropView
 from .session import Session, SessionState
-from .unroll import Axis, DropSpec, PhysicalGraphTemplate, leaf_axes, unroll
+from .unroll import (Axis, DropSpec, PhysicalGraphTemplate, compile_unroll,
+                     leaf_axes, unroll, unroll_dict)
 
 __all__ = [
-    "AppDrop", "AppState", "Axis", "Construct", "DataDrop",
+    "AppDrop", "AppState", "Axis", "CompiledPGT", "Construct", "DataDrop",
     "DataIslandDropManager", "DataLifecycleManager", "Drop", "DropSpec",
-    "DropState", "Event", "EventBus", "ExecutionReport", "FaultManager",
-    "FilePayload", "GraphValidationError", "Kind", "LogicalEdge",
-    "LogicalGraph", "LogicalGraphTemplate", "MasterDropManager",
-    "MemoryPayload", "NodeDropManager", "NodeInfo", "NullPayload",
-    "PartitionResult", "Payload", "PayloadError", "PhysicalGraphTemplate",
-    "Pipeline", "RecordingListener", "Session", "SessionState",
-    "StragglerWatcher", "critical_path", "elastic_remap", "get_app",
-    "iter_pgt", "leaf_axes", "load_lgt", "load_pgt", "make_cluster",
-    "map_partitions", "min_res", "min_time", "partition_stats",
-    "register_app", "save_lgt", "save_pgt", "simulate_makespan", "unroll",
-    "with_retries",
+    "DropState", "DropView", "Event", "EventBus", "ExecutionReport",
+    "FaultManager", "FilePayload", "GraphValidationError", "Kind",
+    "LogicalEdge", "LogicalGraph", "LogicalGraphTemplate",
+    "MasterDropManager", "MemoryPayload", "NodeDropManager", "NodeInfo",
+    "NullPayload", "PartitionResult", "Payload", "PayloadError",
+    "PhysicalGraphTemplate", "Pipeline", "RecordingListener", "Session",
+    "SessionState", "StragglerWatcher", "compile_unroll", "critical_path",
+    "elastic_remap", "get_app", "iter_pgt", "leaf_axes", "load_lgt",
+    "load_pgt", "make_cluster", "map_partitions", "min_res", "min_time",
+    "partition_stats", "register_app", "save_lgt", "save_pgt",
+    "simulate_makespan", "unroll", "unroll_dict", "with_retries",
 ]

@@ -78,8 +78,13 @@ class Pipeline:
             dl = self.deadline if self.deadline is not None else float("inf")
             partition_mod.min_res(pgt, deadline=dl, dop=self.dop)
         elif self.algorithm == "none":
-            for i, spec in enumerate(pgt.drops.values()):
-                spec.partition = i
+            from .pgt import CompiledPGT
+            if isinstance(pgt, CompiledPGT):
+                import numpy as np
+                pgt.partition = np.arange(len(pgt), dtype=np.int32)
+            else:
+                for i, spec in enumerate(pgt.drops.values()):
+                    spec.partition = i
         else:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         self.translate_time = time.monotonic() - t0

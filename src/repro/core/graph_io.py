@@ -17,6 +17,7 @@ from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from .logical import LogicalGraph, LogicalGraphTemplate
+from .pgt import CompiledPGT
 from .unroll import DropSpec, PhysicalGraphTemplate
 
 
@@ -93,17 +94,17 @@ def iter_pgt(path: str) -> Iterator[Tuple[str, Any]]:
                     yield "edge", tuple(item)
 
 
-def load_pgt(path: str) -> PhysicalGraphTemplate:
-    pgt: Optional[PhysicalGraphTemplate] = None
+def load_pgt(path: str) -> CompiledPGT:
+    """Incrementally load a PGT into the array-based representation."""
+    name: Optional[str] = None
+    specs: List[DropSpec] = []
+    edges: List[Tuple[str, str, bool]] = []
     for kind, payload in iter_pgt(path):
         if kind == "header":
-            pgt = PhysicalGraphTemplate(name=payload["name"])
+            name = payload["name"]
         elif kind == "drop":
-            assert pgt is not None
-            pgt.add_drop(payload)
+            specs.append(payload)
         else:
-            assert pgt is not None
-            pgt.edges.append(payload)  # bulk append; adjacency lazily rebuilt
-    assert pgt is not None, f"no header found in {path}"
-    pgt._succ = pgt._pred = None
-    return pgt
+            edges.append(payload)
+    assert name is not None, f"no header found in {path}"
+    return CompiledPGT.from_specs(name, specs, edges)

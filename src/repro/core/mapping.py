@@ -20,6 +20,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
+from .pgt import KIND_DATA, CompiledPGT
 from .unroll import PhysicalGraphTemplate
 
 
@@ -39,7 +42,9 @@ class PartitionGraph:
     eweights: Dict[Tuple[int, int], float] = field(default_factory=dict)
 
     @classmethod
-    def from_pgt(cls, pgt: PhysicalGraphTemplate) -> "PartitionGraph":
+    def from_pgt(cls, pgt) -> "PartitionGraph":
+        if isinstance(pgt, CompiledPGT):
+            return cls._from_compiled(pgt)
         g = cls()
         for spec in pgt.drops.values():
             g.vweights[spec.partition] = (
@@ -57,8 +62,40 @@ class PartitionGraph:
             g.eweights[key] = g.eweights.get(key, 0.0) + vol
         return g
 
+    @classmethod
+    def _from_compiled(cls, pgt: CompiledPGT) -> "PartitionGraph":
+        """Vectorized partition-graph extraction (bincount-based).
 
-def map_partitions(pgt: PhysicalGraphTemplate, nodes: Sequence[NodeInfo],
+        Handles unassigned drops (partition == -1, or any negative id) the
+        same way the dict path does: the sentinel is just another partition
+        key (shifted internally for bincount, which rejects negatives).
+        """
+        g = cls()
+        part, _, shift, span = pgt.partition_index()
+        if part.size == 0:
+            return g
+        ids, w = pgt.partition_loads(pgt.weight_arr)
+        _, mem = pgt.partition_loads(
+            np.where(pgt.kind_arr == KIND_DATA, pgt.vol_arr, 0.0))
+        for p, wv, mv in zip(ids.tolist(), w.tolist(), mem.tolist()):
+            g.vweights[p] = float(wv)
+            g.vmem[p] = float(mv)
+        ps, pd = part[pgt.edge_src], part[pgt.edge_dst]
+        cross = ps != pd
+        if cross.any():
+            vols = pgt.edge_volumes()[cross]
+            lo = np.minimum(ps[cross], pd[cross])
+            hi = np.maximum(ps[cross], pd[cross])
+            key = (lo + shift) * np.int64(span) + (hi + shift)
+            uniq, inv = np.unique(key, return_inverse=True)
+            sums = np.bincount(inv, weights=vols)
+            for k, v in zip(uniq.tolist(), sums.tolist()):
+                g.eweights[(int(k) // span - shift,
+                            int(k) % span - shift)] = float(v)
+        return g
+
+
+def map_partitions(pgt, nodes: Sequence[NodeInfo],
                    alpha: float = 1.0, beta: float = 1e-9,
                    refine_iters: int = 200) -> Dict[int, str]:
     """Assign each PGT partition to a node; also stamps ``spec.node``."""
@@ -154,6 +191,16 @@ def map_partitions(pgt: PhysicalGraphTemplate, nodes: Sequence[NodeInfo],
         if not improved:
             break
 
-    for spec in pgt.drops.values():
-        spec.node = assign[spec.partition]
+    if isinstance(pgt, CompiledPGT):
+        # vectorized node stamping: partition id -> node id lookup table
+        # (assign's keys are exactly pgt.partition's values, so the
+        # sentinel-shifted index covers them)
+        _, idx, shift, span = pgt.partition_index()
+        table = np.full(span, -1, dtype=np.int32)
+        for p, node_name in assign.items():
+            table[p + shift] = pgt.node_id_for(node_name)
+        pgt.node_ids = table[idx]
+    else:
+        for spec in pgt.drops.values():
+            spec.node = assign[spec.partition]
     return assign

@@ -7,14 +7,24 @@ Two families, exactly as the paper describes:
   point in time the number of drops running in parallel within a single
   partition is no greater than a Degree of Parallelism (DoP) threshold."
   Implemented as edge-zeroing internalisation (Sarkar-style): start with one
-  partition per drop, repeatedly merge across the heaviest data-movement edge
-  when doing so does not increase the estimated completion time and respects
-  the DoP cap; refined with simulated annealing (the paper cites simulated
-  annealing and stochastic local search for exactly this step).
+  partition per drop and merge across data-movement edges in descending cost
+  order while the per-level app width of every partition stays within the
+  DoP cap.
 
 * ``min_res`` — "minimise the number of produced partitions subject to
   satisfying completion deadline and the DoP threshold constraints."
-  Implemented as topological bin-packing with deadline checks + annealing.
+
+Each family has two implementations dispatched on the PGT type:
+
+* the seed **dict path** (``PhysicalGraphTemplate``): merge trials validated
+  with a full makespan simulation each (plus optional simulated-annealing
+  refinement) — O(E · sim); the semantic reference, fine to ~10^4 drops.
+* the **array path** (``CompiledPGT``): union-find over int32 ids with
+  incremental per-level width tracking, candidate *prefixes* of the
+  cost-sorted edge list evaluated with the vectorized critical-path
+  estimator (exact event simulation for small graphs), best prefix kept —
+  O(E α(E) + checkpoints · E).  This is what sustains the paper's
+  millions-of-drops translate regime.
 """
 from __future__ import annotations
 
@@ -23,9 +33,20 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
-from .schedule import (DEFAULT_BANDWIDTH, critical_path, edge_cost,
+import numpy as np
+
+from .pgt import KIND_APP, CompiledPGT
+from .schedule import (DEFAULT_BANDWIDTH, _critical_path_arrays, _extract,
+                       _simulate_arrays, critical_path, edge_cost,
                        simulate_makespan)
 from .unroll import PhysicalGraphTemplate
+
+# graphs up to this many drops evaluate merge checkpoints with the exact
+# event simulation (guarantees makespan never regresses past the trivial
+# partitioning); larger graphs use the vectorized critical-path estimator
+EXACT_EVAL_MAX_DROPS = 20_000
+# largest graph for which the *final* reported makespan is exact-simulated
+EXACT_FINAL_MAX_DROPS = 400_000
 
 
 @dataclass
@@ -41,7 +62,7 @@ class PartitionResult:
 # ---------------------------------------------------------------------------
 
 
-def _partition_dop(pgt: PhysicalGraphTemplate, members: Set[str]) -> int:
+def _partition_dop(pgt, members: Set[str]) -> int:
     """Max antichain width restricted to a partition's app drops.
 
     Exact max-antichain is expensive; we use the standard level-width
@@ -100,18 +121,158 @@ def _renumber(uf: "_UnionFind", pgt: PhysicalGraphTemplate) -> Dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
+# array path: shared merge machinery
+# ---------------------------------------------------------------------------
+
+
+def _resolve_labels(parent: List[int]) -> np.ndarray:
+    """Collapse a union-find forest to dense partition labels, vectorized."""
+    par = np.asarray(parent, dtype=np.int64)
+    while True:
+        pp = par[par]
+        if np.array_equal(pp, par):
+            break
+        par = pp
+    return np.unique(par, return_inverse=True)[1].astype(np.int32)
+
+
+class _ArrayMerger:
+    """Union-find merge of drops with incremental per-level DoP tracking."""
+
+    def __init__(self, pgt: CompiledPGT, dop: int) -> None:
+        self.dop = dop
+        self.n = pgt.num_drops
+        self.parent = list(range(self.n))
+        self.levels = pgt.topo_levels().tolist()
+        self.is_app = (pgt.kind_arr == KIND_APP).tolist()
+        # per-root level->app-count; singletons are implicit (lazy dicts)
+        self.widths: Dict[int, Dict[int, int]] = {}
+
+    def find(self, x: int) -> int:
+        parent = self.parent
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def _width_of(self, root: int) -> Dict[int, int]:
+        w = self.widths.get(root)
+        if w is None:
+            w = {self.levels[root]: 1} if self.is_app[root] else {}
+        return w
+
+    def try_merge(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return True
+        wa, wb = self._width_of(ra), self._width_of(rb)
+        small, big = (wa, wb) if len(wa) <= len(wb) else (wb, wa)
+        for lvl, c in small.items():
+            if big.get(lvl, 0) + c > self.dop:
+                return False
+        merged = dict(big)
+        for lvl, c in small.items():
+            merged[lvl] = merged.get(lvl, 0) + c
+        self.parent[rb] = ra
+        self.widths[ra] = merged
+        self.widths.pop(rb, None)
+        return True
+
+    def labels(self) -> np.ndarray:
+        return _resolve_labels(self.parent)
+
+
+def _edge_merge_order(pgt: CompiledPGT, bandwidth: float) -> np.ndarray:
+    cost = pgt.edge_volumes() / bandwidth
+    return np.argsort(-cost, kind="stable")
+
+
+def _merge_snapshots(pgt: CompiledPGT, a, dop: int, bandwidth: float,
+                     max_trials: Optional[int] = None
+                     ) -> List[Tuple[int, float, np.ndarray]]:
+    """Sweep geometric prefixes of the cost-sorted edge list through the
+    DoP-capped union-find merge, evaluating each checkpoint.
+
+    Returns ``(k, makespan, labels)`` snapshots; ``k = 0`` is the trivial
+    partitioning.  Evaluation is the exact event simulation for graphs up
+    to ``EXACT_EVAL_MAX_DROPS``, the vectorized critical-path estimator
+    above.  Shared by ``min_time`` (argmin) and ``min_res`` (deepest
+    deadline-meeting prefix).
+    """
+    exact = pgt.num_drops <= EXACT_EVAL_MAX_DROPS
+
+    def evaluate(labels: np.ndarray) -> float:
+        if exact:
+            return _simulate_arrays(a, labels, dop, bandwidth)
+        return _critical_path_arrays(a, labels, bandwidth)
+
+    merger = _ArrayMerger(pgt, dop)
+    esrc = pgt.edge_src.tolist()
+    edst = pgt.edge_dst.tolist()
+    order = _edge_merge_order(pgt, bandwidth)
+    if max_trials is not None:
+        order = order[:max_trials]
+    order_l = order.tolist()
+    ne = len(order_l)
+    ks = sorted({0, ne // 32, ne // 16, ne // 8, ne // 4, ne // 2, ne})
+    snapshots: List[Tuple[int, float, np.ndarray]] = []
+    prev = 0
+    for k in ks:
+        for j in range(prev, k):
+            ei = order_l[j]
+            merger.try_merge(esrc[ei], edst[ei])
+        prev = k
+        labels = merger.labels()
+        snapshots.append((k, evaluate(labels), labels))
+    return snapshots
+
+
+# ---------------------------------------------------------------------------
 # min_time
 # ---------------------------------------------------------------------------
 
 
-def min_time(pgt: PhysicalGraphTemplate, dop: int = 8,
+def _min_time_compiled(pgt: CompiledPGT, dop: int, bandwidth: float,
+                       max_trials: Optional[int] = None) -> PartitionResult:
+    a = _extract(pgt)
+    n = pgt.num_drops
+    if n == 0:
+        pgt.partition = np.empty(0, dtype=np.int32)
+        return PartitionResult(0, 0.0, "min_time", dop)
+
+    snapshots = _merge_snapshots(pgt, a, dop, bandwidth, max_trials)
+    best_k, best_t, best_labels = min(
+        snapshots, key=lambda s: (s[1], -s[0]))   # ties -> fewer partitions
+
+    pgt.partition = best_labels
+    nparts = int(best_labels.max()) + 1 if best_labels.size else 0
+    if n <= EXACT_EVAL_MAX_DROPS:
+        makespan = best_t
+    elif n <= EXACT_FINAL_MAX_DROPS:
+        makespan = _simulate_arrays(a, best_labels, dop, bandwidth)
+    else:
+        makespan = best_t   # critical-path estimate (documented)
+    return PartitionResult(nparts, makespan, "min_time", dop)
+
+
+def min_time(pgt, dop: int = 8,
              bandwidth: float = DEFAULT_BANDWIDTH,
              anneal_iters: int = 0, seed: int = 0,
              max_trials: Optional[int] = None) -> PartitionResult:
-    """``max_trials`` bounds the number of merge trials (each trial runs a
-    full makespan simulation, O(N log N)); for very large PGTs pass a
-    budget — the heaviest data-movement edges are tried first, which is
-    where nearly all of the win lives."""
+    """``max_trials`` bounds the number of merge trials (dict path: each
+    trial runs a full makespan simulation; array path: bounds the merge
+    prefix).  The array path needs no budget — the full cost-sorted edge
+    list is merged in O(E α(E))."""
+    if isinstance(pgt, CompiledPGT):
+        res = _min_time_compiled(pgt, dop, bandwidth, max_trials)
+        if anneal_iters:
+            # the annealer is view-based and representation-agnostic;
+            # explicit opt-in, so the per-move simulation cost is expected
+            ms = _anneal(pgt, dop, bandwidth, anneal_iters, seed,
+                         objective="time")
+            n = len({s.partition for s in pgt.drops.values()})
+            return PartitionResult(n, ms, "min_time", dop)
+        return res
     uids = list(pgt.drops)
     uf = _UnionFind(uids)
 
@@ -143,10 +304,6 @@ def min_time(pgt: PhysicalGraphTemplate, dop: int = 8,
     best_time = simulate_makespan(pgt, dop, bandwidth)
 
     for cost, s, d in edges:
-        if cost <= 0.0:
-            # zero-cost edges: merge freely if DoP allows (fewer partitions,
-            # same makespan)
-            pass
         ra, rb = uf.find(s), uf.find(d)
         if ra == rb:
             continue
@@ -173,7 +330,6 @@ def min_time(pgt: PhysicalGraphTemplate, dop: int = 8,
     if anneal_iters:
         best_time = _anneal(pgt, dop, bandwidth, anneal_iters, seed,
                             objective="time")
-    n = len(set(groups.values()))
     n = len({s.partition for s in pgt.drops.values()})
     return PartitionResult(n, best_time, "min_time", dop)
 
@@ -183,10 +339,96 @@ def min_time(pgt: PhysicalGraphTemplate, dop: int = 8,
 # ---------------------------------------------------------------------------
 
 
-def min_res(pgt: PhysicalGraphTemplate, deadline: float, dop: int = 8,
+def _min_res_compiled(pgt: CompiledPGT, deadline: float, dop: int,
+                      bandwidth: float) -> PartitionResult:
+    a = _extract(pgt)
+    n = pgt.num_drops
+    if n == 0:
+        pgt.partition = np.empty(0, dtype=np.int32)
+        return PartitionResult(0, 0.0, "min_res", dop)
+    lower = _critical_path_arrays(a, None, bandwidth)
+    deadline = max(deadline, lower)
+
+    exact = n <= EXACT_EVAL_MAX_DROPS
+
+    def evaluate(lab: np.ndarray) -> float:
+        if exact:
+            return _simulate_arrays(a, lab, dop, bandwidth)
+        return _critical_path_arrays(a, lab, bandwidth)
+
+    # cost-ordered internalisation, but — unlike min_time — the merge depth
+    # is *chosen by the deadline*: among geometric prefixes of the sorted
+    # edge list, take the deepest whose makespan still meets the deadline
+    # (maximal internalisation under the DoP cap can serialize independent
+    # apps and overshoot a deadline the trivial partitioning meets)
+    snapshots = _merge_snapshots(pgt, a, dop, bandwidth)
+    meeting = [s for s in snapshots if s[1] <= deadline * (1 + 1e-9)]
+    if meeting:
+        # deepest merge (fewest partitions) that meets the deadline
+        _, t, labels = max(meeting, key=lambda s: s[0])
+    else:
+        # deadline unmeetable: best-effort fastest assignment
+        _, t, labels = min(snapshots, key=lambda s: s[1])
+    # partition-level reduction: fold the lightest partitions together while
+    # the deadline and the per-level width caps hold
+    nparts = int(labels.max()) + 1
+    if nparts > 1:
+        loads = np.bincount(labels, weights=pgt.weight_arr,
+                            minlength=nparts)
+        lv = pgt.topo_levels()
+        is_app = pgt.kind_arr == KIND_APP
+        pwidths: List[Dict[int, int]] = [dict() for _ in range(nparts)]
+        for i in np.flatnonzero(is_app).tolist():
+            w = pwidths[labels[i]]
+            l = int(lv[i])
+            w[l] = w.get(l, 0) + 1
+        order = sorted(range(nparts), key=lambda p: loads[p])
+        remap = np.arange(nparts, dtype=np.int32)
+        cur_labels = labels
+        blocked: Set[int] = set()
+        target = order[0]
+        for p in order[1:]:
+            if p == target or p in blocked:
+                continue
+            wt, wp = pwidths[target], pwidths[p]
+            if any(wt.get(l, 0) + c > dop for l, c in wp.items()):
+                continue
+            trial = remap.copy()
+            trial[trial == p] = target
+            trial_labels = np.unique(trial[labels],
+                                     return_inverse=True)[1].astype(np.int32)
+            tt = evaluate(trial_labels)
+            if tt <= deadline * (1 + 1e-9):
+                remap = trial
+                cur_labels = trial_labels
+                t = tt
+                for l, c in wp.items():
+                    wt[l] = wt.get(l, 0) + c
+            else:
+                blocked.add(p)
+        labels = cur_labels
+
+    pgt.partition = labels
+    nparts = int(labels.max()) + 1 if labels.size else 0
+    if not exact and n <= EXACT_FINAL_MAX_DROPS:
+        t = _simulate_arrays(a, labels, dop, bandwidth)
+    return PartitionResult(nparts, t, "min_res", dop)
+
+
+def min_res(pgt, deadline: float, dop: int = 8,
             bandwidth: float = DEFAULT_BANDWIDTH,
             anneal_iters: int = 0, seed: int = 0) -> PartitionResult:
     """Greedy topological packing into as few partitions as possible."""
+    if isinstance(pgt, CompiledPGT):
+        res = _min_res_compiled(pgt, deadline, dop, bandwidth)
+        if anneal_iters:
+            ms = _anneal(pgt, dop, bandwidth, anneal_iters, seed,
+                         objective="res", deadline=max(
+                             deadline, critical_path(
+                                 pgt, bandwidth, partitioned=False)))
+            n = len({s.partition for s in pgt.drops.values()})
+            return PartitionResult(n, ms, "min_res", dop)
+        return res
     order = pgt.topological_order()
     # lower bound on achievable makespan: unpartitioned critical path
     lower = critical_path(pgt, bandwidth, partitioned=False)
@@ -238,9 +480,11 @@ def min_res(pgt: PhysicalGraphTemplate, deadline: float, dop: int = 8,
 # ---------------------------------------------------------------------------
 
 
-def _anneal(pgt: PhysicalGraphTemplate, dop: int, bandwidth: float,
+def _anneal(pgt, dop: int, bandwidth: float,
             iters: int, seed: int, objective: str,
             deadline: Optional[float] = None) -> float:
+    """Simulated-annealing refinement over the drops-view API
+    (representation-agnostic: dict PGTs and CompiledPGTs both work)."""
     rng = random.Random(seed)
     uids = list(pgt.drops)
     cur_parts = {u: pgt.drops[u].partition for u in uids}

@@ -7,21 +7,39 @@ Estimates the makespan of a partitioned PGT under the paper's assumptions:
 * each partition executes at most ``DoP`` application drops concurrently,
 * resources are homogeneous.
 
-Used both by the ``min_time`` / ``min_res`` partitioners as their objective
-and by the partition-quality benchmark.
+Two graph representations are supported and must agree exactly:
+
+* the legacy dict-of-``DropSpec`` :class:`PhysicalGraphTemplate`,
+* the array-based :class:`repro.core.pgt.CompiledPGT` (CSR adjacency).
+
+Both run the *canonical* event-driven simulation below.  Determinism rules
+(so the two paths produce bit-identical makespans):
+
+* ties are broken by dense drop id == creation order (identical in both
+  representations — leaves in ``lg.leaves()`` order, instances in C-order),
+* at equal times, app completions are processed before readiness events,
+* each partition's waiting queue pops by (enqueue time, drop id),
+* empty PGTs have makespan / critical path 0.0; a single drop's makespan is
+  its weight (these edge cases previously diverged between ``0.0`` and
+  ``max()``-of-empty errors).
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
+from .pgt import KIND_DATA, CompiledPGT, _kahn_levels, coo_to_csr
 from .unroll import PhysicalGraphTemplate
 
 DEFAULT_BANDWIDTH = 1e9   # bytes/s across partitions (homogeneous links)
 
+_EV_DONE = 0     # app finished (frees a DoP slot) — processed first
+_EV_READY = 1    # drop became ready
 
-def edge_cost(pgt: PhysicalGraphTemplate, src: str, dst: str,
+
+def edge_cost(pgt, src: str, dst: str,
               bandwidth: float = DEFAULT_BANDWIDTH) -> float:
     """Cost of an edge if it crosses partitions: moving the data payload."""
     s = pgt.drops[src]
@@ -30,112 +48,261 @@ def edge_cost(pgt: PhysicalGraphTemplate, src: str, dst: str,
     return vol / bandwidth
 
 
-def critical_path(pgt: PhysicalGraphTemplate,
-                  bandwidth: float = DEFAULT_BANDWIDTH,
+# ---------------------------------------------------------------------------
+# array extraction (shared by the canonical kernels)
+# ---------------------------------------------------------------------------
+
+
+class _Arrays:
+    """Flat int/float arrays for one PGT, cached on the PGT object.
+
+    ``partition`` is re-read on every use (it mutates between calls); the
+    structural fields are extracted once.
+    """
+
+    __slots__ = ("n", "weight", "is_data", "esrc", "edst", "evol",
+                 "out_indptr", "out_dst", "out_eid", "levels", "order",
+                 "_lists", "_ecost_l")
+
+    def __init__(self) -> None:
+        self._lists = None      # (weight, is_data, indptr, out_dst, preds)
+        self._ecost_l = None    # (bandwidth, CSR-ordered edge costs)
+
+    def partition_of(self, pgt) -> np.ndarray:
+        if isinstance(pgt, CompiledPGT):
+            return pgt.partition
+        part = np.empty(self.n, dtype=np.int64)
+        for i, spec in enumerate(pgt.drops.values()):
+            part[i] = spec.partition
+        return part
+
+    def sim_lists(self, bandwidth: float):
+        """Python-list views of the static simulation inputs, cached —
+        only the partition labels change between simulate calls."""
+        if self._lists is None:
+            self._lists = (
+                self.weight.tolist(), self.is_data.tolist(),
+                self.out_indptr.tolist(), self.out_dst.tolist(),
+                np.bincount(self.edst, minlength=self.n).tolist())
+        if self._ecost_l is None or self._ecost_l[0] != bandwidth:
+            self._ecost_l = (
+                bandwidth, (self.evol / bandwidth)[self.out_eid].tolist())
+        return self._lists + (self._ecost_l[1],)
+
+
+def _extract(pgt) -> _Arrays:
+    cached = getattr(pgt, "_sched_arrays", None)
+    if cached is not None:
+        return cached
+    a = _Arrays()
+    if isinstance(pgt, CompiledPGT):
+        a.n = pgt.num_drops
+        a.weight = pgt.weight_arr
+        a.is_data = pgt.kind_arr == KIND_DATA
+        a.esrc = pgt.edge_src.astype(np.int64)
+        a.edst = pgt.edge_dst.astype(np.int64)
+        a.evol = pgt.edge_volumes()
+        a.levels = pgt.topo_levels()
+        a.order = pgt.topological_order_ids()
+    else:
+        ids: Dict[str, int] = {u: i for i, u in enumerate(pgt.drops)}
+        a.n = len(ids)
+        a.weight = np.fromiter(
+            (s.weight() for s in pgt.drops.values()), dtype=np.float64,
+            count=a.n)
+        a.is_data = np.fromiter(
+            (s.kind == "data" for s in pgt.drops.values()), dtype=bool,
+            count=a.n)
+        ne = len(pgt.edges)
+        a.esrc = np.empty(ne, dtype=np.int64)
+        a.edst = np.empty(ne, dtype=np.int64)
+        a.evol = np.empty(ne, dtype=np.float64)
+        drops = pgt.drops
+        for k, (s, d, _) in enumerate(pgt.edges):
+            si, di = ids[s], ids[d]
+            a.esrc[k] = si
+            a.edst[k] = di
+            ss = drops[s]
+            a.evol[k] = (ss.data_volume if ss.kind == "data"
+                         else drops[d].data_volume)
+        a.order, a.levels = _kahn_levels(a.n, a.esrc, a.edst)
+    if isinstance(pgt, CompiledPGT):
+        a.out_indptr, a.out_dst, a.out_eid = pgt.out_csr_with_eid()
+    else:
+        a.out_indptr, a.out_dst, a.out_eid = coo_to_csr(a.n, a.esrc, a.edst)
+    try:
+        pgt._sched_arrays = a
+    except AttributeError:  # pragma: no cover - slots-only containers
+        pass
+    return a
+
+
+# NOTE: structural mutation invalidates this cache at the mutation sites —
+# PhysicalGraphTemplate.add_drop/add_edge pop ``_sched_arrays`` directly.
+
+# ---------------------------------------------------------------------------
+# critical path (vectorized, level-synchronous)
+# ---------------------------------------------------------------------------
+
+
+def _critical_path_arrays(a: _Arrays, part: Optional[np.ndarray],
+                          bandwidth: float) -> float:
+    """Longest path; edges cost vol/bandwidth when crossing partitions
+    (or always, when ``part`` is None — the unpartitioned bound)."""
+    if a.n == 0:
+        return 0.0
+    ecost = a.evol / bandwidth
+    if part is not None and a.esrc.size:
+        ecost = ecost * (part[a.esrc] != part[a.edst])
+    dist = np.zeros(a.n, dtype=np.float64)
+    best = np.zeros(a.n, dtype=np.float64)
+    levels = a.levels
+    if a.esrc.size:
+        edge_lv = levels[a.edst]
+        e_order = np.argsort(edge_lv, kind="stable")
+        edge_lv_sorted = edge_lv[e_order]
+        bounds = np.searchsorted(
+            edge_lv_sorted, np.arange(edge_lv_sorted[-1] + 2))
+        esrc_s, edst_s, ecost_s = (a.esrc[e_order], a.edst[e_order],
+                                   ecost[e_order])
+    else:
+        bounds = None
+    node_order = np.argsort(levels, kind="stable")
+    node_lv_sorted = levels[node_order]
+    nbounds = np.searchsorted(
+        node_lv_sorted, np.arange(int(levels.max()) + 2))
+    for lv in range(int(levels.max()) + 1):
+        nodes = node_order[nbounds[lv]:nbounds[lv + 1]]
+        if lv > 0 and bounds is not None and lv < len(bounds) - 1:
+            lo, hi = bounds[lv], bounds[lv + 1]
+            if hi > lo:
+                np.maximum.at(best, edst_s[lo:hi],
+                              dist[esrc_s[lo:hi]] + ecost_s[lo:hi])
+        dist[nodes] = best[nodes] + a.weight[nodes]
+    return float(dist.max())
+
+
+def critical_path(pgt, bandwidth: float = DEFAULT_BANDWIDTH,
                   partitioned: bool = True) -> float:
     """Longest path through the DAG (execution + cross-partition movement)."""
-    dist: Dict[str, float] = {}
-    for uid in pgt.topological_order():
-        spec = pgt.drops[uid]
-        best = 0.0
-        for p in pgt.predecessors(uid):
-            c = 0.0
-            if (not partitioned) or (pgt.drops[p].partition !=
-                                     spec.partition):
-                c = edge_cost(pgt, p, uid, bandwidth)
-            best = max(best, dist[p] + c)
-        dist[uid] = best + spec.weight()
-    return max(dist.values()) if dist else 0.0
+    a = _extract(pgt)
+    part = a.partition_of(pgt) if partitioned else None
+    return _critical_path_arrays(a, part, bandwidth)
 
 
-def simulate_makespan(pgt: PhysicalGraphTemplate, dop: int,
-                      bandwidth: float = DEFAULT_BANDWIDTH) -> float:
-    """List-scheduling simulation honouring the per-partition DoP cap.
+# ---------------------------------------------------------------------------
+# canonical makespan simulation
+# ---------------------------------------------------------------------------
 
-    Event-driven simulation: an app drop becomes ready when all its
-    predecessors finished (plus cross-partition transfer latency); each
-    partition runs at most ``dop`` apps at once.  Data drops are free.
-    """
-    preds_left: Dict[str, int] = {}
-    ready_at: Dict[str, float] = {}
-    for uid in pgt.drops:
-        preds_left[uid] = len(pgt.predecessors(uid))
-        ready_at[uid] = 0.0
 
-    # (time, seq, kind, uid) events; kind 0 = drop became ready, 1 = app done
-    evq: List[Tuple[float, int, int, str]] = []
-    seq = 0
-    running: Dict[int, int] = {}     # partition -> running apps
-    waiting: Dict[int, List[Tuple[float, int, str]]] = {}
-    finished_at: Dict[str, float] = {}
+def _simulate_arrays(a: _Arrays, part: np.ndarray, dop: int,
+                     bandwidth: float) -> float:
+    """Canonical list-scheduling event simulation over int drop ids."""
+    n = a.n
+    if n == 0:
+        return 0.0
+    # plain python lists: ~5x faster scalar access than numpy in this loop
+    weight, is_data, indptr, out_dst, preds0, ecost = a.sim_lists(bandwidth)
+    partl = part.tolist() if isinstance(part, np.ndarray) else list(part)
+    preds_left = list(preds0)
+    ready_at = [0.0] * n
+
+    evq: List[Tuple[float, int, int]] = []
+    running: Dict[int, int] = {}
+    waiting: Dict[int, List[Tuple[float, int]]] = {}
     makespan = 0.0
 
-    def push_ready(uid: str, t: float) -> None:
-        nonlocal seq
-        heapq.heappush(evq, (t, seq, 0, uid))
-        seq += 1
+    for u in range(n):
+        if preds_left[u] == 0:
+            evq.append((0.0, _EV_READY, u))
+    heapq.heapify(evq)
 
-    for uid in pgt.roots():
-        push_ready(uid, 0.0)
-
-    def try_start(part: int, t: float) -> None:
-        nonlocal seq
-        q = waiting.get(part)
-        while q and running.get(part, 0) < dop:
-            _, _, uid = heapq.heappop(q)
-            running[part] = running.get(part, 0) + 1
-            dur = pgt.drops[uid].weight()
-            heapq.heappush(evq, (t + dur, seq, 1, uid))
-            seq += 1
-
-    def complete(uid: str, t: float) -> None:
+    def complete(u: int, t: float) -> None:
         nonlocal makespan
-        finished_at[uid] = t
-        makespan = max(makespan, t)
-        spec = pgt.drops[uid]
-        for s in pgt.successors(uid):
-            cost = 0.0
-            if pgt.drops[s].partition != spec.partition:
-                cost = edge_cost(pgt, uid, s, bandwidth)
-            ready_at[s] = max(ready_at[s], t + cost)
+        if t > makespan:
+            makespan = t
+        pu = partl[u]
+        for j in range(indptr[u], indptr[u + 1]):
+            s = out_dst[j]
+            cost = ecost[j] if partl[s] != pu else 0.0
+            ra = t + cost
+            if ra > ready_at[s]:
+                ready_at[s] = ra
             preds_left[s] -= 1
             if preds_left[s] == 0:
-                push_ready(s, ready_at[s])
+                heapq.heappush(evq, (ready_at[s], _EV_READY, s))
+
+    def try_start(p: int, t: float) -> None:
+        q = waiting.get(p)
+        while q and running.get(p, 0) < dop:
+            _, u = heapq.heappop(q)
+            running[p] = running.get(p, 0) + 1
+            heapq.heappush(evq, (t + weight[u], _EV_DONE, u))
 
     while evq:
-        t, _, kind, uid = heapq.heappop(evq)
-        spec = pgt.drops[uid]
-        if kind == 1:                       # app finished
-            running[spec.partition] -= 1
-            complete(uid, t)
-            try_start(spec.partition, t)
+        t, kind, u = heapq.heappop(evq)
+        if kind == _EV_DONE:
+            p = partl[u]
+            running[p] -= 1
+            complete(u, t)
+            try_start(p, t)
             continue
-        # drop became ready
-        if spec.kind == "data" or spec.weight() == 0.0:
-            complete(uid, t)
+        if is_data[u] or weight[u] == 0.0:
+            complete(u, t)
             continue
-        part = spec.partition
-        heapq.heappush(waiting.setdefault(part, []), (t, id(uid), uid))
-        try_start(part, t)
+        p = partl[u]
+        heapq.heappush(waiting.setdefault(p, []), (t, u))
+        try_start(p, t)
 
     return makespan
 
 
-def partition_stats(pgt: PhysicalGraphTemplate) -> Dict[str, float]:
-    parts: Dict[int, float] = {}
-    cross_volume = 0.0
-    for uid, spec in pgt.drops.items():
-        parts[spec.partition] = parts.get(spec.partition, 0.0) + spec.weight()
-    for s, d, _ in pgt.edges:
-        if pgt.drops[s].partition != pgt.drops[d].partition:
-            sp = pgt.drops[s]
-            cross_volume += (sp.data_volume if sp.kind == "data"
-                             else pgt.drops[d].data_volume)
-    loads = list(parts.values()) or [0.0]
+def simulate_makespan(pgt, dop: int,
+                      bandwidth: float = DEFAULT_BANDWIDTH) -> float:
+    """List-scheduling simulation honouring the per-partition DoP cap.
+
+    Event-driven: an app drop becomes ready when all its predecessors
+    finished (plus cross-partition transfer latency); each partition runs
+    at most ``dop`` apps at once.  Data drops are free.  Works identically
+    for dict-based and array-based PGTs (see module docstring).
+    """
+    a = _extract(pgt)
+    return _simulate_arrays(a, a.partition_of(pgt), dop, bandwidth)
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+
+def partition_stats(pgt) -> Dict[str, float]:
+    if isinstance(pgt, CompiledPGT):
+        if pgt.num_drops == 0:
+            return {"num_partitions": 0.0, "cross_volume": 0.0,
+                    "max_load": 0.0, "mean_load": 0.0, "imbalance": 1.0}
+        ids, loads = pgt.partition_loads(pgt.weight_arr)
+        part = pgt.partition
+        cross = part[pgt.edge_src] != part[pgt.edge_dst]
+        cross_volume = float(pgt.edge_volumes()[cross].sum())
+        nump = float(ids.size)
+    else:
+        parts: Dict[int, float] = {}
+        for uid, spec in pgt.drops.items():
+            parts[spec.partition] = (parts.get(spec.partition, 0.0)
+                                     + spec.weight())
+        cross_volume = 0.0
+        for s, d, _ in pgt.edges:
+            if pgt.drops[s].partition != pgt.drops[d].partition:
+                sp = pgt.drops[s]
+                cross_volume += (sp.data_volume if sp.kind == "data"
+                                 else pgt.drops[d].data_volume)
+        loads = list(parts.values())
+        nump = float(len(parts))
+    loads = list(np.asarray(loads, dtype=np.float64)) or [0.0]
     return {
-        "num_partitions": float(len(parts)),
+        "num_partitions": nump,
         "cross_volume": cross_volume,
-        "max_load": max(loads),
-        "mean_load": sum(loads) / len(loads),
-        "imbalance": max(loads) / max(sum(loads) / len(loads), 1e-12),
+        "max_load": float(max(loads)),
+        "mean_load": float(sum(loads) / len(loads)),
+        "imbalance": float(max(loads) / max(sum(loads) / len(loads), 1e-12)),
     }

@@ -27,6 +27,8 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
+
+import numpy as np
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .constructs import Construct, Kind
@@ -73,10 +75,12 @@ class PhysicalGraphTemplate:
             raise GraphValidationError(f"duplicate drop uid {spec.uid!r}")
         self.drops[spec.uid] = spec
         self._succ = self._pred = None
+        self.__dict__.pop("_sched_arrays", None)
 
     def add_edge(self, src: str, dst: str, streaming: bool = False) -> None:
         self.edges.append((src, dst, streaming))
         self._succ = self._pred = None
+        self.__dict__.pop("_sched_arrays", None)
 
     # -- adjacency --------------------------------------------------------------
     def _build_adj(self) -> None:
@@ -266,7 +270,13 @@ def _uid(name: str, idx: Tuple[int, ...]) -> str:
     return name if not idx else f"{name}#{'.'.join(map(str, idx))}"
 
 
-def unroll(lg: LogicalGraph) -> PhysicalGraphTemplate:
+def unroll_dict(lg: LogicalGraph) -> PhysicalGraphTemplate:
+    """Reference dict-of-DropSpec unroll (the seed path).
+
+    Kept as the semantic oracle for the vectorized CSR path (see
+    :func:`unroll`) and as the fallback for loop-carried graphs, whose
+    iteration-aliasing is inherently per-instance.
+    """
     lg.validate()
     pgt = PhysicalGraphTemplate(name=lg.name)
 
@@ -388,3 +398,157 @@ def unroll(lg: LogicalGraph) -> PhysicalGraphTemplate:
     # of loop-carried drops could surface user errors)
     pgt.topological_order()
     return pgt
+
+
+# ---------------------------------------------------------------------------
+# Vectorized unroll -> CompiledPGT (CSR arrays)
+# ---------------------------------------------------------------------------
+
+
+class _NeedsFallback(Exception):
+    """Raised when an edge pattern has no closed-form array expansion."""
+
+
+def _expand_edge(s_axes: List[Axis], d_axes: List[Axis],
+                 s_base: int, d_base: int):
+    """Vectorized instance-wise edge expansion for one logical edge.
+
+    Mirrors the per-instance join of :func:`unroll_dict`: shared underlying
+    axes align (with Gather fan-in/fan-out via the group ratios), an axis
+    missing on the dst side is consumed in full, an axis missing on the src
+    side broadcasts.  Returns (src_ids, dst_ids) int64 arrays.
+    """
+    d_sizes = [a.size for a in d_axes]
+    nd = 1
+    for s in d_sizes:
+        nd *= s
+    d_strides = []
+    acc = 1
+    for s in reversed(d_sizes):
+        d_strides.append(acc)
+        acc *= s
+    d_strides.reverse()
+    dmap = {a.underlying: (a, j) for j, a in enumerate(d_axes)}
+
+    s_strides = []
+    acc = 1
+    for a in reversed(s_axes):
+        s_strides.append(acc)
+        acc *= a.size
+    s_strides.reverse()
+
+    dst = np.arange(nd, dtype=np.int64)
+    src_acc = np.zeros(nd, dtype=np.int64)
+    for a, s_stride in zip(s_axes, s_strides):
+        hit = dmap.get(a.underlying)
+        if hit is not None:
+            da, j = hit
+            cj = (dst // d_strides[j]) % d_sizes[j]
+            gd, gs = da.group, a.group
+            if gs % gd == 0:
+                # dst instance covers one src index (or a sub-block of one)
+                src_acc = src_acc + ((cj * gd) // gs) * s_stride
+            elif gd % gs == 0:
+                k = gd // gs
+                m = dst.shape[0]
+                dst = np.repeat(dst, k)
+                src_acc = np.repeat(src_acc, k) + (
+                    np.repeat(cj * k, k) +
+                    np.tile(np.arange(k, dtype=np.int64), m)) * s_stride
+            else:
+                raise _NeedsFallback(
+                    f"incommensurate groups on axis {a.underlying!r}")
+        else:
+            # axis absent on dst: consume the full (deduplicated) src range
+            k = a.size
+            m = dst.shape[0]
+            dst = np.repeat(dst, k)
+            src_acc = np.repeat(src_acc, k) + np.tile(
+                np.arange(k, dtype=np.int64), m) * s_stride
+    return s_base + src_acc, d_base + dst
+
+
+def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
+    """Unroll a logical graph straight into CSR arrays.
+
+    Drop ids are allocated leaf-by-leaf in ``lg.leaves()`` order with
+    C-order instance coordinates — the exact creation order of
+    :func:`unroll_dict` — so the two representations are index-compatible
+    and scheduling tie-breaks agree.  Loop-carried graphs (iteration
+    aliasing) fall back to the dict path and are converted.
+    """
+    from .pgt import KIND_APP, KIND_DATA, CompiledPGT, InstanceGroup
+
+    lg.validate()
+    leaves = lg.leaves()
+    if any(c.loop_entry or c.loop_exit for c in leaves):
+        return CompiledPGT.from_dict_pgt(unroll_dict(lg))
+
+    resolver = AxisResolver(lg)
+    axes_of: Dict[str, List[Axis]] = {
+        c.name: resolver.leaf_axes(c.name) for c in leaves}
+
+    groups: List[InstanceGroup] = []
+    base_of: Dict[str, int] = {}
+    base = 0
+    for c in leaves:
+        axes = axes_of[c.name]
+        sizes = tuple(a.size for a in axes)
+        base_of[c.name] = base
+        if c.kind is Kind.DATA:
+            groups.append(InstanceGroup(
+                name=c.name, base=base, sizes=sizes, kind=KIND_DATA,
+                app=None, payload_kind=c.payload_kind, execution_time=0.0,
+                data_volume=float(c.data_volume), error_threshold=0.0,
+                params=dict(c.params)))
+        else:
+            groups.append(InstanceGroup(
+                name=c.name, base=base, sizes=sizes, kind=KIND_APP,
+                app=c.app, payload_kind="memory",
+                execution_time=float(c.execution_time), data_volume=0.0,
+                error_threshold=c.error_threshold, params=dict(c.params)))
+        base += groups[-1].count
+    n = base
+
+    kind = np.empty(n, dtype=np.uint8)
+    ex = np.zeros(n, dtype=np.float64)
+    vol = np.zeros(n, dtype=np.float64)
+    for g in groups:
+        kind[g.base:g.base + g.count] = g.kind
+        ex[g.base:g.base + g.count] = g.execution_time
+        vol[g.base:g.base + g.count] = g.data_volume
+
+    srcs: List[np.ndarray] = []
+    dsts: List[np.ndarray] = []
+    strs: List[np.ndarray] = []
+    for e in lg.edges:
+        try:
+            s_ids, d_ids = _expand_edge(
+                axes_of[e.src], axes_of[e.dst],
+                base_of[e.src], base_of[e.dst])
+        except _NeedsFallback:
+            return CompiledPGT.from_dict_pgt(unroll_dict(lg))
+        srcs.append(s_ids)
+        dsts.append(d_ids)
+        strs.append(np.full(s_ids.shape[0], e.streaming, dtype=bool))
+
+    if srcs:
+        esrc = np.concatenate(srcs)
+        edst = np.concatenate(dsts)
+        estr = np.concatenate(strs)
+        # dedup (parallel logical edges / grouped fan-in overlap), like the
+        # dict path's seen-set; canonical order is (src, dst)
+        key = (esrc * np.int64(n) + edst) * 2 + estr
+        _, first = np.unique(key, return_index=True)
+        esrc, edst, estr = esrc[first], edst[first], estr[first]
+    else:
+        esrc = np.empty(0, dtype=np.int64)
+        edst = np.empty(0, dtype=np.int64)
+        estr = np.empty(0, dtype=bool)
+
+    return CompiledPGT(lg.name, groups, kind, ex, vol, esrc, edst, estr)
+
+
+def unroll(lg: LogicalGraph) -> "CompiledPGT":
+    """LG -> array-based physical graph template (the default path)."""
+    return compile_unroll(lg)

@@ -1,0 +1,45 @@
+"""JAX version-compat shims for mesh context management.
+
+The ambient-mesh context manager has moved repeatedly across JAX releases:
+
+* ``jax.set_mesh(mesh)``            — newest spelling,
+* ``jax.sharding.use_mesh(mesh)``   — intermediate spelling,
+* ``jax.experimental.set_mesh`` / ``jax.experimental.use_mesh`` — earlier,
+* ``with mesh:``                    — the classic ``Mesh.__enter__`` context
+  (always available; sufficient here because every ``jit`` call also passes
+  explicit ``NamedSharding`` in_shardings, which carry the mesh).
+
+``use_mesh(mesh)`` resolves whichever exists on the installed JAX, so the
+launch/dryrun stack and the sharding tests run unchanged across versions.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, ContextManager, Optional
+
+import jax
+
+
+def _resolve() -> Optional[Callable[[Any], ContextManager]]:
+    for mod, attr in (
+            (jax, "set_mesh"),
+            (jax.sharding, "use_mesh"),
+            (getattr(jax, "experimental", None), "set_mesh"),
+            (getattr(jax, "experimental", None), "use_mesh"),
+    ):
+        fn = getattr(mod, attr, None) if mod is not None else None
+        if fn is not None:
+            return fn
+    return None
+
+
+_CTX_FN = _resolve()
+
+
+def use_mesh(mesh) -> ContextManager:
+    """Context manager making ``mesh`` the ambient mesh, on any JAX."""
+    if _CTX_FN is not None:
+        return _CTX_FN(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)  # pragma: no cover - defensive

@@ -1,9 +1,14 @@
 """Property-based tests (hypothesis) for system invariants."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; tier-1 must still collect cleanly")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import (DropState, NodeInfo, Pipeline, critical_path,

@@ -1,0 +1,307 @@
+"""CSR (CompiledPGT) vs dict (PhysicalGraphTemplate) translate equivalence.
+
+The array path must be observationally identical to the seed dict path:
+same drops, same edges, valid topological order, and bit-identical
+makespans for identical partition assignments (the canonical simulator's
+determinism rules).  Randomized over scatter/gather widths 1–32 without
+requiring hypothesis.
+"""
+import random
+
+import pytest
+
+from repro.core import (CompiledPGT, NodeInfo, PhysicalGraphTemplate,
+                        critical_path, map_partitions, min_res, min_time,
+                        simulate_makespan, unroll, unroll_dict)
+from repro.core.partition import _partition_dop
+from repro.core.unroll import DropSpec
+from repro.dsl import GraphBuilder
+
+
+def random_layered_lg(seed: int):
+    """src -> scatter(w/d chain) [-> gather(r)] -> out, randomized."""
+    rng = random.Random(seed)
+    width = rng.choice([1, 2, 3, 4, 7, 8, 16, 32])
+    depth = rng.randint(1, 3)
+    fanins = [f for f in (1, 2, 4, 8, width) if width % f == 0]
+    fanin = rng.choice(fanins)
+    g = GraphBuilder(f"rl{seed}")
+    g.data("src")
+    with g.scatter("sc", width):
+        for i in range(depth):
+            g.component(f"w{i}", app="noop", time=rng.uniform(0.0, 0.01))
+            g.data(f"d{i}", volume=rng.uniform(0, 1e6))
+    with g.gather("ga", fanin):
+        g.component("r", app="noop", time=0.001)
+    g.data("out")
+    g.connect("src", "w0")
+    for i in range(depth):
+        g.connect(f"w{i}", f"d{i}")
+        if i + 1 < depth:
+            g.connect(f"d{i}", f"w{i+1}")
+    g.connect(f"d{depth-1}", "r")
+    g.connect("r", "out")
+    return g.graph()
+
+
+def corner_turn_lg(outer: int, inner: int):
+    g = GraphBuilder("ct")
+    with g.scatter("t", outer):
+        with g.scatter("f", inner):
+            g.component("e", app="noop", time=0.002)
+            g.data("pt", volume=2e5)
+    with g.group_by("gb"):
+        g.component("col", app="noop", time=0.004)
+    g.chain("e", "pt", "col")
+    return g.graph()
+
+
+def loop_lg(iters: int):
+    g = GraphBuilder("lp")
+    g.data("init")
+    g.component("seed", app="identity", time=0.001)
+    with g.loop("lp", iters):
+        g.data("x", loop_entry=True)
+        g.component("inc", app="t_double", time=0.001)
+        g.data("y", loop_exit=True, carries="x")
+    g.component("out", app="identity", time=0.001)
+    g.data("res")
+    g.chain("init", "seed", "x", "inc", "y")
+    g.chain("y", "out", "res")
+    return g.graph()
+
+
+def assert_same_graph(csr, dic):
+    assert isinstance(csr, CompiledPGT)
+    assert isinstance(dic, PhysicalGraphTemplate)
+    assert len(csr) == len(dic)
+    assert sorted(csr.drops) == sorted(dic.drops)
+    assert sorted(tuple(e) for e in csr.edges) == \
+        sorted(tuple(e) for e in dic.edges)
+    for uid in dic.drops:
+        a, b = csr.drops[uid], dic.drops[uid]
+        assert a.kind == b.kind
+        assert a.construct == b.construct
+        assert a.oid == b.oid
+        assert a.weight() == b.weight()
+        assert a.data_volume == b.data_volume
+
+
+def assert_valid_topo(pgt):
+    pos = {u: i for i, u in enumerate(pgt.topological_order())}
+    assert len(pos) == len(pgt)
+    for s, d, _ in pgt.edges:
+        assert pos[s] < pos[d]
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_graphs_same_drops_edges_and_topo(seed):
+    lg = random_layered_lg(seed)
+    csr, dic = unroll(lg), unroll_dict(lg)
+    assert_same_graph(csr, dic)
+    assert_valid_topo(csr)
+    assert_valid_topo(dic)
+    assert set(csr.roots()) == set(dic.roots())
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("dop", [1, 3, 8])
+def test_identical_assignment_identical_makespan(seed, dop):
+    """Same partition assignment => bit-identical makespan on both paths."""
+    lg = random_layered_lg(seed)
+    csr, dic = unroll(lg), unroll_dict(lg)
+    min_time(dic, dop=dop)          # seed dict partitioner
+    for uid, spec in dic.drops.items():
+        csr.drops[uid].partition = spec.partition
+    assert simulate_makespan(csr, dop=dop) == simulate_makespan(dic, dop=dop)
+    assert critical_path(csr) == critical_path(dic)
+    assert critical_path(csr, partitioned=False) == \
+        critical_path(dic, partitioned=False)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_array_min_time_quality_and_dop(seed):
+    lg = random_layered_lg(seed)
+    csr = unroll(lg)
+    dop = 2 + seed % 3
+    # trivial assignment: every drop its own partition
+    for i, s in enumerate(csr.drops.values()):
+        s.partition = i
+    trivial = simulate_makespan(csr, dop=dop)
+    res = min_time(csr, dop=dop)
+    assert res.makespan <= trivial + 1e-9
+    assert res.num_partitions == \
+        len({s.partition for s in csr.drops.values()})
+    # every partition respects the DoP level-width cap
+    members = {}
+    for uid, s in csr.drops.items():
+        members.setdefault(s.partition, set()).add(uid)
+    for ms in members.values():
+        assert _partition_dop(csr, ms) <= dop
+    # makespan >= pure-compute critical path
+    cp = critical_path(csr, bandwidth=1e30, partitioned=False)
+    assert simulate_makespan(csr, dop=dop) >= cp - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_array_min_res_meets_loose_deadline(seed):
+    lg = random_layered_lg(seed)
+    csr = unroll(lg)
+    loose = critical_path(csr, partitioned=False) * 10
+    res = min_res(csr, deadline=loose, dop=4)
+    assert res.makespan <= loose * (1 + 1e-6)
+    csr2 = unroll(lg)
+    tight = min_res(csr2, deadline=0.0, dop=4)
+    assert res.num_partitions <= tight.num_partitions
+
+
+def test_array_min_res_does_not_overshoot_meetable_deadline():
+    """Regression: maximal internalisation under a dop=1 cap serializes
+    independent apps; min_res must back off to meet a meetable deadline."""
+    specs = [
+        DropSpec(uid="D", kind="data", construct="D", oid=()),
+        DropSpec(uid="A", kind="app", construct="A", oid=(), app="noop",
+                 execution_time=100.0),
+        DropSpec(uid="C", kind="data", construct="C", oid=()),
+        DropSpec(uid="B", kind="app", construct="B", oid=(), app="noop",
+                 execution_time=100.0),
+    ]
+    edges = [("D", "A", False), ("D", "C", False), ("C", "B", False)]
+    csr = CompiledPGT.from_specs("g", specs, edges)
+    res = min_res(csr, deadline=150.0, dop=1)
+    assert res.makespan <= 150.0 * (1 + 1e-6)
+    assert res.num_partitions == 2
+
+
+@pytest.mark.parametrize("outer,inner", [(3, 2), (4, 4), (2, 8)])
+def test_corner_turn_equivalence(outer, inner):
+    lg = corner_turn_lg(outer, inner)
+    csr, dic = unroll(lg), unroll_dict(lg)
+    assert_same_graph(csr, dic)
+    cols = [u for u in csr.drops if u.startswith("col")]
+    assert len(cols) == inner
+    for cu in cols:
+        assert len(csr.predecessors(cu)) == outer
+        assert sorted(csr.predecessors(cu)) == sorted(dic.predecessors(cu))
+
+
+@pytest.mark.parametrize("iters", [1, 3, 5])
+def test_loop_fallback_equivalence(iters):
+    """Loop-carried graphs take the dict fallback but yield a CompiledPGT."""
+    lg = loop_lg(iters)
+    csr, dic = unroll(lg), unroll_dict(lg)
+    assert isinstance(csr, CompiledPGT)
+    assert_same_graph(csr, dic)
+    # iteration aliasing: one x entry, `iters` y exits
+    assert sum(1 for u in csr.drops if u.split("#")[0] == "y") == iters
+    assert sum(1 for u in csr.drops if u.split("#")[0] == "x") == 1
+
+
+def test_mapping_on_compiled_pgt():
+    lg = random_layered_lg(3)
+    csr = unroll(lg)
+    min_time(csr, dop=4)
+    nodes = [NodeInfo(f"n{i}") for i in range(3)]
+    assign = map_partitions(csr, nodes)
+    assert set(assign) == {s.partition for s in csr.drops.values()}
+    assert all(s.node is not None for s in csr.drops.values())
+    # dict path agrees on the partition-graph it maps
+    dic = unroll_dict(lg)
+    for uid, s in csr.drops.items():
+        dic.drops[uid].partition = s.partition
+    from repro.core.mapping import PartitionGraph
+    ga = PartitionGraph.from_pgt(csr)
+    gb = PartitionGraph.from_pgt(dic)
+    assert ga.vweights == pytest.approx(gb.vweights)
+    assert ga.eweights == pytest.approx(gb.eweights)
+
+
+# ---------------------------------------------------------------------------
+# regression: empty / single-drop edge cases (0.0-vs-max() divergence)
+# ---------------------------------------------------------------------------
+
+
+def _empty_pair():
+    dic = PhysicalGraphTemplate(name="empty")
+    csr = CompiledPGT.from_specs("empty", [], [])
+    return csr, dic
+
+
+def _single_pair(kind: str, t: float, vol: float):
+    spec = DropSpec(uid="only", kind=kind, construct="only", oid=(),
+                    app="noop" if kind == "app" else None,
+                    execution_time=t, data_volume=vol, partition=0)
+    dic = PhysicalGraphTemplate(name="one")
+    dic.add_drop(spec)
+    csr = CompiledPGT.from_specs(
+        "one", [DropSpec(uid="only", kind=kind, construct="only", oid=(),
+                         app=spec.app, execution_time=t, data_volume=vol,
+                         partition=0)], [])
+    return csr, dic
+
+
+def test_empty_pgt_schedule_edge_cases():
+    csr, dic = _empty_pair()
+    assert simulate_makespan(csr, dop=4) == simulate_makespan(dic, dop=4) \
+        == 0.0
+    assert critical_path(csr) == critical_path(dic) == 0.0
+    assert critical_path(csr, partitioned=False) == \
+        critical_path(dic, partitioned=False) == 0.0
+    assert min_time(csr, dop=2).num_partitions == 0
+    assert min_res(csr, deadline=1.0, dop=2).num_partitions == 0
+
+
+def test_single_app_drop_schedule_edge_cases():
+    csr, dic = _single_pair("app", 2.5, 0.0)
+    assert simulate_makespan(csr, dop=1) == simulate_makespan(dic, dop=1) \
+        == 2.5
+    assert critical_path(csr) == critical_path(dic) == 2.5
+
+
+def test_single_data_drop_schedule_edge_cases():
+    csr, dic = _single_pair("data", 0.0, 1e9)
+    assert simulate_makespan(csr, dop=1) == simulate_makespan(dic, dop=1) \
+        == 0.0
+    assert critical_path(csr) == critical_path(dic) == 0.0
+
+
+def test_from_specs_rejects_duplicate_uids():
+    """Regression: loading must reject duplicate drop uids like the old
+    dict path's add_drop did."""
+    from repro.core import GraphValidationError
+    dup = [DropSpec(uid="x", kind="data", construct="x", oid=()),
+           DropSpec(uid="x", kind="data", construct="x", oid=())]
+    with pytest.raises(GraphValidationError, match="duplicate drop uid"):
+        CompiledPGT.from_specs("t", dup, [])
+
+
+def test_mapping_unpartitioned_compiled_pgt():
+    """Regression: fresh CompiledPGT (all partitions -1) must map like the
+    dict path (the sentinel is just another partition key)."""
+    lg = random_layered_lg(1)
+    csr, dic = unroll(lg), unroll_dict(lg)
+    nodes = [NodeInfo("n0"), NodeInfo("n1")]
+    assign_csr = map_partitions(csr, nodes)
+    assign_dic = map_partitions(dic, nodes)
+    assert set(assign_csr) == set(assign_dic) == {-1}
+    assert all(s.node is not None for s in csr.drops.values())
+
+
+def test_params_read_does_not_retain():
+    """Regression: read-only params access must not grow per-drop state."""
+    csr = unroll(random_layered_lg(2))
+    for _, spec in csr.drops.items():
+        assert isinstance(spec.params, dict)
+    assert len(csr._params_override) == 0
+
+
+def test_dropview_write_through():
+    csr = unroll(random_layered_lg(0))
+    uid = next(iter(csr.drops))
+    view = csr.drops[uid]
+    view.partition = 42
+    assert csr.partition[csr.index_of(uid)] == 42
+    view.node = "node7"
+    assert csr.drops[uid].node == "node7"
+    view.params["custom"] = 1
+    assert csr.drops[uid].params["custom"] == 1
