@@ -1,0 +1,126 @@
+"""Deploy+execute throughput: object engine vs compiled frontier engine.
+
+The paper's headline regime is data-activated execution scaling to tens of
+millions of concurrent tasks; the object engine (one Python ``Drop`` +
+thread-pool future + event chain per drop) caps executable graphs around
+10^4 drops.  This benchmark measures both deploy+execute substrates on the
+same translated ``CompiledPGT`` at 1k/10k/100k-drop tiers:
+
+* **objects**  — per-drop instantiation + event-propagated cascade,
+* **compiled** — batched index-slice deploy + the frontier scheduler
+  (``repro.core.exec_compiled``), no per-drop Python objects.
+
+Reported per tier: wall seconds (deploy+execute), drops/s, the paper's
+Fig. 8 metric (execution overhead per drop), and compiled-over-objects
+speedup.  Results also land as JSON in ``results/bench_execute.json``
+(alongside the existing dryrun results) for CI trending.
+
+Usage:
+  python benchmarks/bench_execute.py                 # full tier suite
+  python benchmarks/bench_execute.py --tiers 1000    # quick tier only
+  python benchmarks/bench_execute.py --max-object-drops 10000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core import Pipeline
+from repro.dsl import GraphBuilder
+
+# drops per unit width in make_lg: src + width*(w, d, w2, d2) + r + out
+DROPS_PER_WIDTH = 4
+
+RESULTS_PATH = Path(__file__).resolve().parents[1] / "results" / \
+    "bench_execute.json"
+
+
+def make_lg(width: int):
+    g = GraphBuilder(f"ex{width}")
+    g.data("src")
+    with g.scatter("sc", width):
+        g.component("w", app="noop", time=0.0)
+        g.data("d")
+        g.component("w2", app="identity", time=0.0)
+        g.data("d2")
+    with g.gather("ga", width):
+        g.component("r", app="noop", time=0.0)
+    g.data("out")
+    g.chain("src", "w", "d", "w2", "d2", "r", "out")
+    return g.graph()
+
+
+def run_tier(target_drops: int, execution: str,
+             timeout: float = 600.0) -> Dict[str, float]:
+    width = max(target_drops // DROPS_PER_WIDTH, 1)
+    lg = make_lg(width)
+    with Pipeline(num_nodes=4, workers_per_node=8, dop=64,
+                  execution=execution) as p:
+        p.translate(lg)            # same array translate for both modes
+        t0 = time.monotonic()
+        p.deploy()
+        rep = p.execute(timeout=timeout, inputs={"src": 1})
+        wall = time.monotonic() - t0
+        assert rep.ok, (rep.state, rep.errors[:3])
+        n = sum(rep.status_counts.values())
+    return {
+        "tier": target_drops,
+        "mode": execution,
+        "drops": n,
+        "deploy_s": round(p.deploy_time, 4),
+        "execute_s": round(rep.wall_time, 4),
+        "wall_s": round(wall, 4),
+        "drops_per_s": round(n / wall, 1),
+        "overhead_us_per_drop": round(rep.overhead_per_drop_us(), 3),
+    }
+
+
+def run(tiers=(1_000, 10_000, 100_000),
+        max_object_drops: Optional[int] = None) -> List[Dict[str, float]]:
+    rows: List[Dict[str, float]] = []
+    for tier in tiers:
+        compiled = run_tier(tier, "compiled")
+        rows.append(compiled)
+        if max_object_drops is not None and tier > max_object_drops:
+            print(f"# objects skipped at tier {tier} "
+                  f"(--max-object-drops {max_object_drops})", flush=True)
+            continue
+        objects = run_tier(tier, "objects")
+        objects["speedup_compiled"] = round(
+            compiled["drops_per_s"] / objects["drops_per_s"], 1)
+        rows.append(objects)
+    return rows
+
+
+def emit(rows: List[Dict[str, float]]) -> None:
+    for r in rows:
+        extra = (f"deploy_s={r['deploy_s']};execute_s={r['execute_s']};"
+                 f"overhead_us={r['overhead_us_per_drop']}")
+        if "speedup_compiled" in r:
+            extra += f";compiled_speedup={r['speedup_compiled']}x"
+        print(f"execute_{r['mode']}_drops_per_s[n={r['drops']}],"
+              f"{r['drops_per_s']:.2f},{extra}")
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS_PATH, "w") as fh:
+        json.dump({"benchmark": "bench_execute", "rows": rows}, fh,
+                  indent=2)
+    print(f"# wrote {RESULTS_PATH}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiers", type=int, nargs="+",
+                    default=[1_000, 10_000, 100_000],
+                    help="target drop counts")
+    ap.add_argument("--max-object-drops", type=int, default=None,
+                    help="skip the object engine above this tier "
+                         "(it needs ~100us+ per drop)")
+    args = ap.parse_args()
+    emit(run(tuple(args.tiers), args.max_object_drops))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV lines (one per measurement):
   bench_overhead  — paper Fig. 8 (framework overhead/drop, 1 vs 2 islands)
   bench_translate — paper §3.4/§3.7 (unroll + partition + stream-IO cost)
   bench_partition — paper §3.4 step 3 (min_time vs min_res quality)
+  bench_execute   — deploy+execute: object engine vs compiled frontier
   bench_kernels   — TPU kernels: residuals + VMEM working sets
   bench_roofline  — dry-run roofline terms per (arch x shape), single pod
 """
@@ -12,12 +13,13 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_kernels, bench_overhead, bench_partition,
-                   bench_roofline, bench_translate)
+    from . import (bench_execute, bench_kernels, bench_overhead,
+                   bench_partition, bench_roofline, bench_translate)
     modules = [
         ("overhead", bench_overhead),
         ("translate", bench_translate),
         ("partition", bench_partition),
+        ("execute", bench_execute),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

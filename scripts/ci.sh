@@ -17,4 +17,6 @@ python -m pytest -x -q
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     echo "== translate smoke bench (width 10000) =="
     python benchmarks/bench_translate.py --width 10000
+    echo "== execute smoke bench (10k drops, objects vs compiled) =="
+    python benchmarks/bench_execute.py --tiers 10000
 fi

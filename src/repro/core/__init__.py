@@ -9,6 +9,7 @@ from .drop import (AppDrop, AppState, DataDrop, Drop, DropState, FilePayload,
                    MemoryPayload, NullPayload, Payload, PayloadError)
 from .engine import ExecutionReport, Pipeline
 from .events import Event, EventBus, RecordingListener
+from .exec_compiled import execute_frontier
 from .fault import FaultManager, StragglerWatcher, elastic_remap, with_retries
 from .graph_io import iter_pgt, load_lgt, load_pgt, save_lgt, save_pgt
 from .lifecycle import DataLifecycleManager
@@ -16,16 +17,18 @@ from .logical import (GraphValidationError, LogicalGraph,
                       LogicalGraphTemplate)
 from .managers import (DataIslandDropManager, MasterDropManager,
                        NodeDropManager, get_app, make_cluster, register_app)
-from .mapping import NodeInfo, map_partitions
+from .mapping import NodeInfo, map_partitions, stamp_nodes
 from .partition import PartitionResult, min_res, min_time
 from .schedule import critical_path, partition_stats, simulate_makespan
 from .pgt import CompiledPGT, DropView
-from .session import Session, SessionState
+from .session import (CompiledDropRef, CompiledSession, Session,
+                      SessionState)
 from .unroll import (Axis, DropSpec, PhysicalGraphTemplate, compile_unroll,
                      leaf_axes, unroll, unroll_dict)
 
 __all__ = [
-    "AppDrop", "AppState", "Axis", "CompiledPGT", "Construct", "DataDrop",
+    "AppDrop", "AppState", "Axis", "CompiledDropRef", "CompiledPGT",
+    "CompiledSession", "Construct", "DataDrop",
     "DataIslandDropManager", "DataLifecycleManager", "Drop", "DropSpec",
     "DropState", "DropView", "Event", "EventBus", "ExecutionReport",
     "FaultManager", "FilePayload", "GraphValidationError", "Kind",
@@ -34,8 +37,9 @@ __all__ = [
     "NullPayload", "PartitionResult", "Payload", "PayloadError",
     "PhysicalGraphTemplate", "Pipeline", "RecordingListener", "Session",
     "SessionState", "StragglerWatcher", "compile_unroll", "critical_path",
-    "elastic_remap", "get_app", "iter_pgt", "leaf_axes", "load_lgt",
-    "load_pgt", "make_cluster", "map_partitions", "min_res", "min_time",
-    "partition_stats", "register_app", "save_lgt", "save_pgt",
-    "simulate_makespan", "unroll", "unroll_dict", "with_retries",
+    "elastic_remap", "execute_frontier", "get_app", "iter_pgt",
+    "leaf_axes", "load_lgt", "load_pgt", "make_cluster", "map_partitions",
+    "min_res", "min_time", "partition_stats", "register_app", "save_lgt",
+    "save_pgt", "simulate_makespan", "stamp_nodes", "unroll",
+    "unroll_dict", "with_retries",
 ]

@@ -22,7 +22,8 @@ from .lifecycle import DataLifecycleManager
 from .logical import LogicalGraph, LogicalGraphTemplate
 from .managers import MasterDropManager, make_cluster
 from .mapping import NodeInfo, map_partitions
-from .session import Session, SessionState
+from .pgt import CompiledPGT
+from .session import CompiledSession, Session, SessionState
 from .unroll import PhysicalGraphTemplate, unroll
 
 
@@ -47,14 +48,32 @@ class ExecutionReport:
 
 
 class Pipeline:
-    """End-to-end driver for one logical graph on one cluster."""
+    """End-to-end driver for one logical graph on one cluster.
+
+    ``execution`` selects the deploy+execute substrate:
+
+    * ``"objects"`` — one Python ``Drop`` per graph node, event-driven
+      (the paper's engine; the semantic oracle),
+    * ``"compiled"`` — array-native: batched deploy over ``CompiledPGT``
+      index slices + the frontier scheduler
+      (:mod:`repro.core.exec_compiled`).  Same ``ExecutionReport``, no
+      per-drop Python objects; DLM/straggler services require drop
+      objects and are rejected.
+    """
 
     def __init__(self, num_nodes: int = 2, num_islands: int = 1,
                  workers_per_node: int = 4, dop: int = 8,
                  algorithm: str = "min_time",
                  deadline: Optional[float] = None,
                  enable_dlm: bool = False,
-                 enable_stragglers: bool = False) -> None:
+                 enable_stragglers: bool = False,
+                 execution: str = "objects") -> None:
+        if execution not in ("objects", "compiled"):
+            raise ValueError(f"unknown execution mode {execution!r}")
+        if execution == "compiled" and (enable_dlm or enable_stragglers):
+            raise ValueError(
+                "compiled execution has no per-drop objects; DLM and "
+                "straggler services need execution='objects'")
         self.master, self.nodes = make_cluster(
             num_nodes, num_islands, workers_per_node)
         self.dop = dop
@@ -62,6 +81,7 @@ class Pipeline:
         self.deadline = deadline
         self.enable_dlm = enable_dlm
         self.enable_stragglers = enable_stragglers
+        self.execution = execution
         self.pgt: Optional[PhysicalGraphTemplate] = None
         self.session: Optional[Session] = None
         self.fault_manager: Optional[FaultManager] = None
@@ -94,16 +114,31 @@ class Pipeline:
     # -- stage 5: deploy ---------------------------------------------------------
     def deploy(self, pgt: Optional[PhysicalGraphTemplate] = None,
                session_id: Optional[str] = None) -> Session:
+        supplied = pgt is not None
         pgt = pgt or self.pgt
         assert pgt is not None, "translate() first"
         t0 = time.monotonic()
-        map_partitions(pgt, self.nodes)
-        session = self.master.create_session(
-            session_id or f"s-{uuid.uuid4().hex[:8]}")
-        self.master.deploy(session, pgt)
+        if self.execution == "compiled":
+            if not isinstance(pgt, CompiledPGT):
+                # loop-carried graphs still unroll via the dict fallback;
+                # lift them so the compiled engine can run them (only
+                # replace self.pgt when it IS the graph being lifted)
+                pgt = CompiledPGT.from_dict_pgt(pgt)
+                if not supplied:
+                    self.pgt = pgt
+            map_partitions(pgt, self.nodes)
+            session = CompiledSession(
+                session_id or f"s-{uuid.uuid4().hex[:8]}", pgt)
+            self.master.deploy_compiled(session, pgt)
+            self.fault_manager = None   # needs drop objects
+        else:
+            map_partitions(pgt, self.nodes)
+            session = self.master.create_session(
+                session_id or f"s-{uuid.uuid4().hex[:8]}")
+            self.master.deploy(session, pgt)
+            self.fault_manager = FaultManager(session, pgt, self.master)
         self.deploy_time = time.monotonic() - t0
         self.session = session
-        self.fault_manager = FaultManager(session, pgt, self.master)
         return session
 
     # -- stage 6: execute ----------------------------------------------------------
@@ -111,6 +146,8 @@ class Pipeline:
                 inputs: Optional[Dict[str, Any]] = None) -> ExecutionReport:
         assert self.session is not None, "deploy() first"
         session = self.session
+        if isinstance(session, CompiledSession):
+            return self._execute_compiled(session, timeout, inputs)
         if inputs:
             from .drop import DataDrop
             for uid, value in inputs.items():
@@ -139,6 +176,27 @@ class Pipeline:
             events_published=session.bus.published,
             errors=errs,
             speculative_wins=watcher.wins if watcher else 0,
+        )
+
+    def _execute_compiled(self, session: CompiledSession, timeout: float,
+                          inputs: Optional[Dict[str, Any]]
+                          ) -> ExecutionReport:
+        from .exec_compiled import execute_frontier
+        if inputs:
+            for uid, value in inputs.items():
+                session.write(uid, value)
+        t0 = time.monotonic()
+        finished = execute_frontier(session, timeout=timeout)
+        wall = time.monotonic() - t0
+        errs = [f"{r.uid}: {(r.error_info or '')[:200]}"
+                for r in session.errors()]
+        return ExecutionReport(
+            session_id=session.session_id,
+            state=(session.state.value if finished else "TIMEOUT"),
+            status_counts=session.status(),
+            wall_time=wall,
+            events_published=session.bus.published,
+            errors=errs,
         )
 
     # -- convenience: run everything -----------------------------------------------

@@ -1,0 +1,428 @@
+"""Compiled execution — the deploy+execute fast path over ``CompiledPGT``.
+
+PR 1 lifted the *translate* stage onto flat numpy arrays (``CompiledPGT``);
+this module lifts stages 5–6 the same way, completing the paper's
+data-activated regime for *executable* graphs: no per-drop Python ``Drop``
+objects, no thread-pool futures, no per-event callback chains.
+
+* **Deploy** (``MasterDropManager.deploy_compiled``) validates placement
+  and hands each Node Drop Manager an *index slice* of the CSR arrays —
+  one ``argsort`` over ``node_ids`` instead of one ``_instantiate`` call
+  per DropSpec.
+
+* **Execute** (:func:`execute_frontier`) is a frontier scheduler: drop
+  state lives in a single int8 array on the :class:`CompiledSession`,
+  readiness in a ``pending_inputs`` in-degree counter array.  Execution
+  proceeds wave-by-wave — complete all ready data drops, fire all runnable
+  apps of the frontier (one batched dispatch per node, with vectorised
+  fast paths for ``noop``/``identity``/``sleep`` and the app registry
+  invoked only for apps with real Python work), then advance every
+  successor's in-degree with one ``np.add.at`` per wave.
+
+Semantics contract (the object engine in ``drop.py``/``session.py`` is
+the oracle; ``tests/test_exec_equiv.py`` enforces it):
+
+* a data drop COMPLETES when all producers resolved and none errored,
+  ERRORs as soon as any producer errored;
+* an app runs when all inputs are resolved and the errored fraction is
+  within its error threshold ``t`` (paper Fig. 7), consuming only the
+  COMPLETED inputs sorted by ``(oid, uid)``; otherwise it ERRORs;
+* payload values are write-once at wave granularity; memory payloads live
+  in the session's dense table.
+
+Deliberate divergences (documented in ``docs/execute.md``): waves run
+single-threaded (``sleep`` apps in one wave cost ``max(seconds)``, i.e.
+ideal parallelism), streaming edges are treated as batch dependencies,
+and no per-drop events are published — that is the point.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .managers import _APP_REGISTRY, BUILTIN_FAST_APPS, get_app
+from .pgt import KIND_DATA, CompiledPGT
+from .session import (PK_FILE, PK_NULL, ST_COMPLETED, ST_ERROR, ST_INIT,
+                      CompiledDropRef, CompiledSession)
+
+# per-drop dispatch codes (apps only; data drops never dispatch)
+CODE_PYTHON = 0      # registry app with real Python work
+CODE_NONE = 1        # no app function: complete, write nothing
+CODE_NOOP = 2        # write None to all outputs
+CODE_IDENTITY = 3    # forward the single input (or the input list)
+CODE_SLEEP = 4       # sleep, then write None to all outputs
+
+_FAST_CODE = {"noop": CODE_NOOP, "identity": CODE_IDENTITY,
+              "sleep": CODE_SLEEP}
+
+
+def _dispatch_code(app: Optional[str]) -> int:
+    """Dispatch code for one app name.  A fast code applies only while
+    the registry entry still IS the built-in implementation — users may
+    re-register 'noop'/'identity'/'sleep', and the object oracle would
+    run their function, so the compiled engine must too."""
+    if not app:
+        return CODE_NONE
+    code = _FAST_CODE.get(app, CODE_PYTHON)
+    if code != CODE_PYTHON and \
+            _APP_REGISTRY.get(app) is not BUILTIN_FAST_APPS.get(app):
+        return CODE_PYTHON
+    return code
+
+
+class _WaveTimeout(Exception):
+    """Raised mid-wave when the execution deadline expires.
+
+    Safe to abort anywhere: the scheduler derives its counters from the
+    state array on entry, so a partially-processed wave (some drops
+    terminal, some still INIT) resumes exactly where it stopped."""
+
+
+def _gather_with_counts(indptr: np.ndarray, cols: np.ndarray,
+                        ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenated CSR rows for ``ids`` + per-id row lengths (grouped
+    arange — the same trick ``_kahn_levels`` uses)."""
+    starts = indptr[ids]
+    cnt = indptr[ids + 1] - starts
+    total = int(cnt.sum())
+    if total == 0:
+        return np.empty(0, dtype=cols.dtype), cnt
+    reps = np.repeat(starts - np.concatenate(([0], np.cumsum(cnt)[:-1])),
+                     cnt)
+    return cols[np.arange(total, dtype=np.int64) + reps], cnt
+
+
+def _gather(indptr: np.ndarray, cols: np.ndarray,
+            ids: np.ndarray) -> np.ndarray:
+    return _gather_with_counts(indptr, cols, ids)[0]
+
+
+# ---------------------------------------------------------------------------
+# Registry-app shims — what an app function sees instead of real Drops
+# ---------------------------------------------------------------------------
+
+
+class _DataRef(CompiledDropRef):
+    """Duck-types the slice of ``DataDrop`` that app functions consume:
+    ``read()``/``write()`` against the session's dense payload table
+    (uid/node/read come from the shared row view)."""
+
+    __slots__ = ()
+
+    @property
+    def meta(self) -> Dict[str, Any]:
+        return _drop_meta(self.s.pgt, self.idx)
+
+    def write(self, value: Any) -> None:
+        self.s._write_idx(self.idx, value)
+
+    def nbytes(self) -> int:
+        v = self.s.payloads[self.idx]
+        return int(getattr(v, "nbytes", 0))
+
+
+class _AppRef(CompiledDropRef):
+    """Duck-types the slice of ``AppDrop`` an app function consumes
+    (``app.meta`` with oid/construct/params, ``app.uid``, ``app.node``)."""
+
+    __slots__ = ("_meta",)
+
+    def __init__(self, session: CompiledSession, idx: int) -> None:
+        super().__init__(session, idx)
+        self._meta: Optional[Dict[str, Any]] = None
+
+    @property
+    def meta(self) -> Dict[str, Any]:
+        if self._meta is None:
+            m = _drop_meta(self.s.pgt, self.idx)
+            m["execution_time"] = float(self.s.pgt.exec_arr[self.idx])
+            self._meta = m
+        return self._meta
+
+
+def _drop_meta(pgt: CompiledPGT, idx: int) -> Dict[str, Any]:
+    # same layout NodeDropManager._instantiate builds for real Drops
+    return {"oid": pgt.oid_of(idx), "construct": pgt.group_of(idx).name,
+            **pgt.params_of(idx)}
+
+
+# ---------------------------------------------------------------------------
+# Batched per-node dispatch
+# ---------------------------------------------------------------------------
+
+
+class _Dispatch:
+    """Precomputed dispatch tables + the per-wave app execution logic."""
+
+    def __init__(self, session: CompiledSession) -> None:
+        pgt = session.pgt
+        self.s = session
+        self.pgt = pgt
+        n = pgt.num_drops
+        self.out_indptr, self.out_cols, _ = pgt.out_csr_with_eid()
+        self.in_indptr, self.in_cols, _ = pgt.in_csr_with_eid()
+        self.in_deg = pgt.in_degrees()
+        gidx = pgt.group_idx_arr()
+        if len(pgt.groups):
+            gcode = np.fromiter(
+                (_dispatch_code(g.app) for g in pgt.groups),
+                dtype=np.int8, count=len(pgt.groups))
+            self.app_code = gcode[gidx]
+            gthr = np.fromiter((g.error_threshold for g in pgt.groups),
+                               dtype=np.float64, count=len(pgt.groups))
+            self.thr = pgt.err_arr if pgt.err_arr is not None \
+                else gthr[gidx]
+        else:
+            self.app_code = np.zeros(n, dtype=np.int8)
+            self.thr = np.zeros(n, dtype=np.float64)
+        # the vectorised noop/identity fast paths write only the payload
+        # table; graphs with file-backed payloads take the per-app path so
+        # spill files appear exactly as the object engine would write them
+        self.fast_ok = not bool((session.payload_kind == PK_FILE).any())
+        self.deadline = float("inf")   # set per run by execute_frontier
+
+    # -- wave entry ---------------------------------------------------------
+    def dispatch(self, run_ids: np.ndarray) -> None:
+        """Fire all runnable apps of one wave.
+
+        Sleep apps are handled wave-wide first (the whole wave runs
+        concurrently in the object engine, so one ``max(seconds)`` sleep
+        models it — NOT one per node); everything else goes out as one
+        batched dispatch per node."""
+        if run_ids.size == 0:
+            return
+        codes = self.app_code[run_ids]
+        sleep_ids = run_ids[codes == CODE_SLEEP]
+        if sleep_ids.size:
+            self._sleep_batch(sleep_ids)
+            run_ids = run_ids[codes != CODE_SLEEP]
+            if run_ids.size == 0:
+                return
+        nodes = self.pgt.node_ids[run_ids]
+        order = np.lexsort((run_ids, nodes))
+        run = run_ids[order]
+        bounds = np.flatnonzero(np.diff(nodes[order])) + 1
+        for batch in np.split(run, bounds):
+            self._dispatch_batch(batch)
+
+    def _dispatch_batch(self, batch: np.ndarray) -> None:
+        codes = self.app_code[batch]
+        none_ids = batch[codes == CODE_NONE]
+        if none_ids.size:
+            self.s.drop_state[none_ids] = ST_COMPLETED
+        noop_ids = batch[codes == CODE_NOOP]
+        if noop_ids.size:
+            self._write_none_outputs(noop_ids)
+        ident_ids = batch[codes == CODE_IDENTITY]
+        if ident_ids.size:
+            self._identity_batch(ident_ids)
+        self._run_python_batch(batch[codes == CODE_PYTHON])
+
+    def _run_python_batch(self, ids: np.ndarray) -> None:
+        """Registry-path loop, deadline-checked per app (a wide wave of
+        Python apps must not overshoot the execution timeout)."""
+        for i in ids.tolist():
+            if time.monotonic() > self.deadline:
+                raise _WaveTimeout
+            self._run_python(i)
+
+    # -- fast paths ---------------------------------------------------------
+    def _write_none_outputs(self, ids: np.ndarray) -> None:
+        """noop semantics: write ``None`` to every output, complete."""
+        if not self.fast_ok:
+            self._run_python_batch(ids)
+            return
+        s = self.s
+        dsts = _gather(self.out_indptr, self.out_cols, ids)
+        if dsts.size:
+            s.payloads[dsts] = None
+            s.payload_present[dsts] = True
+        s.drop_state[ids] = ST_COMPLETED
+
+    def _sleep_batch(self, ids: np.ndarray) -> None:
+        """One wave of sleeps runs concurrently in the object engine; the
+        compiled engine models ideal parallelism: sleep the max once.
+
+        On the registry fallback (file payloads present) each app sleeps
+        individually inside ``_run_python`` — no batched sleep on top."""
+        if not self.fast_ok:
+            self._run_python_batch(ids)
+            return
+        secs = max(self._sleep_seconds(i) for i in ids.tolist())
+        if secs > 0:
+            remaining = self.deadline - time.monotonic()
+            if secs > remaining:
+                time.sleep(max(remaining, 0.0))
+                raise _WaveTimeout
+            time.sleep(secs)
+        self._write_none_outputs(ids)
+
+    def _sleep_seconds(self, i: int) -> float:
+        ov = self.pgt._params_override.get(i)
+        if ov is not None and "seconds" in ov:
+            return float(ov["seconds"])
+        return float(self.pgt.group_of(i).params.get("seconds", 0.001))
+
+    def _identity_batch(self, ids: np.ndarray) -> None:
+        if not self.fast_ok:
+            self._run_python_batch(ids)
+            return
+        s = self.s
+        single = ids[self.in_deg[ids] == 1]
+        # multi-input: general list semantics via the registry path
+        self._run_python_batch(ids[self.in_deg[ids] != 1])
+        if single.size == 0:
+            return
+        preds = self.in_cols[self.in_indptr[single]]
+        completed = s.drop_state[preds] == ST_COMPLETED
+        readable = s.payload_present[preds] | \
+            (s.payload_kind[preds] == PK_NULL)
+        hard = completed & ~readable     # absent payload -> PayloadError
+        self._run_python_batch(single[hard])
+        fast = ~hard
+        vals = np.empty(single.size, dtype=object)
+        easy = completed & readable
+        vals[easy] = s.payloads[preds[easy]]
+        # errored input tolerated by t: ok_inputs == [] -> identity of []
+        for k in np.flatnonzero(~completed).tolist():
+            vals[k] = []
+        fast_ids = single[fast]
+        dsts, cnt = _gather_with_counts(self.out_indptr, self.out_cols,
+                                        fast_ids)
+        if dsts.size:
+            s.payloads[dsts] = np.repeat(vals[fast], cnt)
+            s.payload_present[dsts] = True
+        s.drop_state[fast_ids] = ST_COMPLETED
+
+    # -- general path: the app registry -------------------------------------
+    def _run_python(self, i: int) -> None:
+        s = self.s
+        pgt = self.pgt
+        try:
+            name = pgt.app_of(i)
+            func = get_app(name) if name else None
+            if func is not None:
+                ins = self.in_cols[self.in_indptr[i]:self.in_indptr[i + 1]]
+                ok = ins[s.drop_state[ins] == ST_COMPLETED]
+                refs = [_DataRef(s, int(j)) for j in ok]
+                # deterministic input order (the object engine sorts by
+                # (oid, uid) regardless of wiring order)
+                refs.sort(key=lambda r: (pgt.oid_of(r.idx),
+                                         pgt.uid_of(r.idx)))
+                outs = [_DataRef(s, int(j)) for j in
+                        self.out_cols[self.out_indptr[i]:
+                                      self.out_indptr[i + 1]]]
+                func(refs, outs, _AppRef(s, int(i)))
+            s.drop_state[i] = ST_COMPLETED
+        except Exception:  # noqa: BLE001 - app failures become drop ERRORs
+            s.drop_state[i] = ST_ERROR
+            s.error_info[int(i)] = traceback.format_exc(limit=8)
+
+
+# ---------------------------------------------------------------------------
+# The frontier scheduler
+# ---------------------------------------------------------------------------
+
+
+def execute_frontier(session: CompiledSession,
+                     timeout: float = 60.0) -> bool:
+    """Run a deployed :class:`CompiledSession` to completion, wave-by-wave.
+
+    Resume-aware: ``pending_inputs`` and the errored-predecessor counters
+    are derived from the *current* state array, so a session restored from
+    a checkpoint (or pre-seeded with completed drops) continues from
+    exactly where it left off.
+
+    Returns True when every drop reached a terminal state within
+    ``timeout``; on timeout the session is left RUNNING and False is
+    returned (the engine reports state "TIMEOUT").
+    """
+    pgt = session.pgt
+    n = pgt.num_drops
+    session.start()
+    if n == 0:
+        session.finish()
+        return True
+    state = session.drop_state
+    kind = pgt.kind_arr
+    in_deg = pgt.in_degrees()
+    ctx = _Dispatch(session)
+    out_indptr, out_cols = ctx.out_indptr, ctx.out_cols
+
+    # readiness counters, derived from current state (fresh start or resume)
+    src_state = state[pgt.edge_src]
+    terminal_edges = src_state != ST_INIT
+    if terminal_edges.any():
+        pending = in_deg - np.bincount(
+            pgt.edge_dst[terminal_edges], minlength=n)
+        err_preds = np.bincount(
+            pgt.edge_dst[src_state == ST_ERROR],
+            minlength=n).astype(np.int64)
+    else:
+        pending = in_deg.copy()
+        err_preds = np.zeros(n, dtype=np.int64)
+
+    frontier = np.flatnonzero((pending == 0) & (state == ST_INIT))
+    remaining = int((state == ST_INIT).sum())
+    deadline = time.monotonic() + timeout
+    ctx.deadline = deadline   # enforced mid-wave too (wide Python waves)
+
+    while frontier.size:
+        if time.monotonic() > deadline:
+            return False
+
+        # 1. complete all ready data drops of the wave (vectorised)
+        data_ids = frontier[kind[frontier] == KIND_DATA]
+        if data_ids.size:
+            bad = err_preds[data_ids] > 0
+            state[data_ids[~bad]] = ST_COMPLETED
+            errs = data_ids[bad]
+            if errs.size:
+                state[errs] = ST_ERROR
+                for i in errs.tolist():
+                    session.error_info[i] = "producer errored"
+
+        # 2. fire all runnable apps (threshold gate, then per-node batches)
+        app_ids = frontier[kind[frontier] != KIND_DATA]
+        if app_ids.size:
+            n_in = in_deg[app_ids]
+            nerr = err_preds[app_ids]
+            frac_err = nerr / np.maximum(n_in, 1)
+            fail = frac_err > ctx.thr[app_ids]
+            failed = app_ids[fail]
+            if failed.size:
+                state[failed] = ST_ERROR
+                for i, ne, ni in zip(failed.tolist(), nerr[fail].tolist(),
+                                     n_in[fail].tolist()):
+                    session.error_info[i] = (
+                        f"{ne}/{ni} inputs errored > "
+                        f"t={float(ctx.thr[i])}")
+            try:
+                ctx.dispatch(app_ids[~fail])
+            except _WaveTimeout:
+                # mid-wave abort: skip the in-degree advance; counters
+                # are re-derived from the state array on resume
+                return False
+
+        remaining -= int(frontier.size)
+
+        # 3. advance in-degrees: one np.add.at per wave
+        succ = _gather(out_indptr, out_cols, frontier)
+        if succ.size:
+            np.add.at(pending, succ, -1)
+            errored = frontier[state[frontier] == ST_ERROR]
+            if errored.size:
+                np.add.at(err_preds,
+                          _gather(out_indptr, out_cols, errored), 1)
+            cand = np.unique(succ)
+            frontier = cand[(pending[cand] == 0) & (state[cand] == ST_INIT)]
+        else:
+            frontier = np.empty(0, dtype=np.int64)
+
+    if remaining == 0:
+        session.finish()
+        return True
+    return False

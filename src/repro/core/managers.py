@@ -20,13 +20,17 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from .drop import AppDrop, DataDrop, Drop, DropState, make_payload
 from .events import EventBus
 from .mapping import NodeInfo
-from .session import Session
+from .pgt import CompiledPGT
+from .session import CompiledSession, Session
 from .unroll import DropSpec, PhysicalGraphTemplate
+from .util import safe_uid as _safe
 
 # ---------------------------------------------------------------------------
 # Application registry — pipeline components (paper §3.1)
@@ -78,6 +82,13 @@ def _sleep(inputs: List[DataDrop], outputs: List[DataDrop],
         o.write(None)
 
 
+# the built-in implementations the compiled engine may replace with
+# vectorised fast paths — if a user re-registers one of these names, the
+# registry entry no longer ``is`` the builtin and the fast path must yield
+BUILTIN_FAST_APPS: Dict[str, AppFunc] = {
+    "noop": _noop, "identity": _identity, "sleep": _sleep}
+
+
 @register_app("bash")
 def _bash(inputs: List[DataDrop], outputs: List[DataDrop],
           app: AppDrop) -> None:
@@ -106,6 +117,8 @@ class NodeDropManager:
             max_workers=max_workers,
             thread_name_prefix=f"ndm-{info.name}")
         self.sessions: Dict[str, Dict[str, Drop]] = {}
+        # compiled sessions: session id -> drop-id index slice on this node
+        self.compiled_sessions: Dict[str, np.ndarray] = {}
         self._lock = threading.Lock()
 
     @property
@@ -152,9 +165,26 @@ class NodeDropManager:
             d.meta["execution_time"] = spec.execution_time
         return d
 
+    def register_compiled(self, session: CompiledSession,
+                          indices: np.ndarray) -> None:
+        """Batched deploy: record the drop-id slice placed on this node.
+
+        The array path's replacement for ``create_drops`` — no per-drop
+        instantiation; the drops *are* the rows of the session's state
+        arrays, and this node owns the ``indices`` view of them.
+        """
+        with self._lock:
+            self.compiled_sessions[session.session_id] = indices
+        session.node_slices[self.name] = indices
+
     # -- failure simulation -----------------------------------------------------
     def fail(self) -> None:
         """Simulate node death: everything non-terminal on it is lost."""
+        if self.compiled_sessions:
+            raise NotImplementedError(
+                "node-failure recovery for compiled sessions is not "
+                "implemented (no per-drop objects to migrate); use "
+                "execution='objects' for fault-injection scenarios")
         self.info.alive = False
 
     def shutdown(self) -> None:
@@ -171,7 +201,10 @@ class DataIslandDropManager:
                  node_managers: Sequence[NodeDropManager]) -> None:
         self.name = name
         self.node_managers = {nm.name: nm for nm in node_managers}
-        self.cross_node_edges: List[Tuple[str, str, bool]] = []
+        # edges leaving/entering this island, recorded PER SESSION (a
+        # single shared list used to accumulate across sessions and leak
+        # one session's edges into the next deployment's wiring pass)
+        self.cross_node_edges: Dict[str, List[Tuple[str, str, bool]]] = {}
 
     def deploy(self, session: Session, pgt: PhysicalGraphTemplate,
                specs: Sequence[DropSpec]) -> None:
@@ -187,11 +220,27 @@ class DataIslandDropManager:
             self.node_managers[node].create_drops(session, nspecs)
         # intra-island edges: wire those whose both ends live here
         mine = {s.uid for s in specs}
+        crossing = self.cross_node_edges.setdefault(session.session_id, [])
         for s, d, streaming in pgt.edges:
             if s in mine and d in mine:
                 _wire(session, s, d, streaming)
             elif s in mine or d in mine:
-                self.cross_node_edges.append((s, d, streaming))
+                crossing.append((s, d, streaming))
+
+    def deploy_compiled(self, session: CompiledSession, pgt: CompiledPGT,
+                        by_node: Dict[str, np.ndarray]) -> None:
+        """Array-native deployment: hand each node its drop-id slice.
+
+        No edge wiring happens — adjacency stays in the shared CSR arrays
+        and the frontier scheduler reads it directly; islands only
+        validate node placement, exactly the paper's Fig. 6 split.
+        """
+        unknown = set(by_node) - set(self.node_managers)
+        if unknown:
+            raise ValueError(f"island {self.name}: drops placed on unknown "
+                             f"nodes {sorted(unknown)}")
+        for node, indices in by_node.items():
+            self.node_managers[node].register_compiled(session, indices)
 
     def nodes_alive(self) -> List[str]:
         return [n for n, nm in self.node_managers.items() if nm.info.alive]
@@ -239,18 +288,57 @@ class MasterDropManager:
             by_island.setdefault(im.name, []).append(spec)
         for iname, specs in by_island.items():
             self.islands[iname].deploy(session, pgt, specs)
-        # wire edges crossing island boundaries (recorded by the islands)
-        wired = set()
+        # wire edges crossing island boundaries (recorded by the islands,
+        # scoped to THIS session; a cross-island edge appears in both
+        # endpoint islands' records and must be wired exactly once)
+        sid = session.session_id
+        wired: Set[Tuple[str, str, bool]] = set()
         for im in self.islands.values():
-            for s, d, streaming in im.cross_node_edges:
-                key = (s, d, streaming)
+            record = im.cross_node_edges.get(sid, [])
+            for key in record:
                 if key in wired:
                     continue
+                s, d, streaming = key
                 if s in session.drops and d in session.drops:
                     _wire(session, s, d, streaming)
                     wired.add(key)
-            im.cross_node_edges = [
-                e for e in im.cross_node_edges if e not in wired]
+            remaining = [e for e in record if e not in wired]
+            if remaining:
+                im.cross_node_edges[sid] = remaining
+            else:
+                im.cross_node_edges.pop(sid, None)
+
+    def deploy_compiled(self, session: CompiledSession,
+                        pgt: CompiledPGT) -> None:
+        """Recursive array-native deployment (paper Fig. 6, batched).
+
+        One stable ``argsort`` over ``node_ids`` yields every node's
+        drop-id slice; islands get their nodes' slices — no DropSpec
+        views are materialised anywhere on this path.
+        """
+        session.deploy()
+        node_ids = pgt.node_ids
+        if node_ids.size and int(node_ids.min()) < 0:
+            first = int(np.flatnonzero(node_ids < 0)[0])
+            raise ValueError(
+                f"drop {pgt.uid_of(first)} not mapped to a node; "
+                "run mapping.map_partitions first")
+        order = np.argsort(node_ids, kind="stable").astype(np.int64)
+        sorted_ids = node_ids[order]
+        uniq, starts = np.unique(sorted_ids, return_index=True)
+        bounds = np.append(starts, node_ids.size)
+        by_island: Dict[str, Dict[str, np.ndarray]] = {}
+        for k, nid in enumerate(uniq.tolist()):
+            name = pgt.node_names[nid]
+            im = self._island_of(name)
+            by_island.setdefault(im.name, {})[name] = \
+                order[bounds[k]:bounds[k + 1]]
+        for iname, by_node in by_island.items():
+            self.islands[iname].deploy_compiled(session, pgt, by_node)
+        if pgt.num_edges:
+            session.cross_node_edges = int(
+                (node_ids[pgt.edge_src] != node_ids[pgt.edge_dst]).sum())
+        self._sessions[session.session_id] = session  # type: ignore[assignment]
 
     def node_managers(self) -> Dict[str, NodeDropManager]:
         out: Dict[str, NodeDropManager] = {}
@@ -272,10 +360,6 @@ def _wire(session: Session, src: str, dst: str, streaming: bool) -> None:
     else:
         raise ValueError(f"invalid edge {src}->{dst}: "
                          f"{type(s).__name__}->{type(d).__name__}")
-
-
-def _safe(uid: str) -> str:
-    return uid.replace("/", "_").replace("#", "_").replace(".", "_")
 
 
 # ---------------------------------------------------------------------------

@@ -366,53 +366,101 @@ def _min_res_compiled(pgt: CompiledPGT, deadline: float, dop: int,
     if meeting:
         # deepest merge (fewest partitions) that meets the deadline
         _, t, labels = max(meeting, key=lambda s: s[0])
+        # then binary-search the partition COUNT: fold the labelling into k
+        # load-balanced bins (respecting the per-level DoP caps) and find
+        # the smallest k whose evaluated makespan still meets the deadline.
+        # This replaces the old greedy pairwise partition folding, which
+        # stopped at the first blocked pair and left the count approximate.
+        labels, t = _min_parts_search(pgt, labels, deadline, dop, evaluate,
+                                      t)
     else:
         # deadline unmeetable: best-effort fastest assignment
         _, t, labels = min(snapshots, key=lambda s: s[1])
-    # partition-level reduction: fold the lightest partitions together while
-    # the deadline and the per-level width caps hold
-    nparts = int(labels.max()) + 1
-    if nparts > 1:
-        loads = np.bincount(labels, weights=pgt.weight_arr,
-                            minlength=nparts)
-        lv = pgt.topo_levels()
-        is_app = pgt.kind_arr == KIND_APP
-        pwidths: List[Dict[int, int]] = [dict() for _ in range(nparts)]
-        for i in np.flatnonzero(is_app).tolist():
-            w = pwidths[labels[i]]
-            l = int(lv[i])
-            w[l] = w.get(l, 0) + 1
-        order = sorted(range(nparts), key=lambda p: loads[p])
-        remap = np.arange(nparts, dtype=np.int32)
-        cur_labels = labels
-        blocked: Set[int] = set()
-        target = order[0]
-        for p in order[1:]:
-            if p == target or p in blocked:
-                continue
-            wt, wp = pwidths[target], pwidths[p]
-            if any(wt.get(l, 0) + c > dop for l, c in wp.items()):
-                continue
-            trial = remap.copy()
-            trial[trial == p] = target
-            trial_labels = np.unique(trial[labels],
-                                     return_inverse=True)[1].astype(np.int32)
-            tt = evaluate(trial_labels)
-            if tt <= deadline * (1 + 1e-9):
-                remap = trial
-                cur_labels = trial_labels
-                t = tt
-                for l, c in wp.items():
-                    wt[l] = wt.get(l, 0) + c
-            else:
-                blocked.add(p)
-        labels = cur_labels
 
     pgt.partition = labels
     nparts = int(labels.max()) + 1 if labels.size else 0
     if not exact and n <= EXACT_FINAL_MAX_DROPS:
         t = _simulate_arrays(a, labels, dop, bandwidth)
     return PartitionResult(nparts, t, "min_res", dop)
+
+
+def _fold_to_k(labels: np.ndarray, loads: np.ndarray,
+               pwidths: List[Dict[int, int]], dop: int,
+               k: int) -> Optional[np.ndarray]:
+    """Fold a partitioning into <= k bins: heaviest partitions first, each
+    into the least-loaded bin whose per-level app widths stay within the
+    DoP cap.  Returns the folded (dense) labels, or None when the width
+    caps make k bins infeasible."""
+    import heapq as _hq
+    nparts = loads.shape[0]
+    if k >= nparts:
+        return labels
+    remap = np.empty(nparts, dtype=np.int32)
+    # LPT with k machines: k empty bins up front, heaviest partition into
+    # the least-loaded bin whose width caps still hold
+    bin_load = [0.0] * k
+    bin_width: List[Dict[int, int]] = [dict() for _ in range(k)]
+    heap: List[Tuple[float, int]] = [(0.0, b) for b in range(k)]
+    for p in np.argsort(-loads, kind="stable").tolist():
+        wp = pwidths[p]
+        placed = -1
+        popped: List[Tuple[float, int]] = []
+        while heap:
+            load, b = _hq.heappop(heap)
+            if load != bin_load[b]:
+                continue                   # stale entry
+            wb = bin_width[b]
+            if all(wb.get(l, 0) + c <= dop for l, c in wp.items()):
+                placed = b
+                break
+            popped.append((load, b))
+        for e in popped:
+            _hq.heappush(heap, e)
+        if placed < 0:
+            return None
+        wb = bin_width[placed]
+        for l, c in wp.items():
+            wb[l] = wb.get(l, 0) + c
+        bin_load[placed] += float(loads[p])
+        _hq.heappush(heap, (bin_load[placed], placed))
+        remap[p] = placed
+    folded = remap[labels]
+    # dense renumber (some of the k bins may have stayed empty)
+    return np.unique(folded, return_inverse=True)[1].astype(np.int32)
+
+
+def _min_parts_search(pgt: CompiledPGT, labels: np.ndarray, deadline: float,
+                      dop: int, evaluate, t_best: float
+                      ) -> Tuple[np.ndarray, float]:
+    """Binary search on the partition count over the exact-sim evaluator.
+
+    ``labels`` must meet the deadline.  Probes fold(k) for k in
+    [1, nparts] and returns the labelling of the smallest k found whose
+    evaluated makespan still meets the deadline (O(log P) evaluations).
+    """
+    nparts = int(labels.max()) + 1
+    if nparts <= 1:
+        return labels, t_best
+    loads = np.bincount(labels, weights=pgt.weight_arr, minlength=nparts)
+    lv = pgt.topo_levels()
+    pwidths: List[Dict[int, int]] = [dict() for _ in range(nparts)]
+    for i in np.flatnonzero(pgt.kind_arr == KIND_APP).tolist():
+        w = pwidths[labels[i]]
+        l = int(lv[i])
+        w[l] = w.get(l, 0) + 1
+    best_labels, best_t = labels, t_best
+    lo, hi = 1, nparts
+    while lo < hi:
+        mid = (lo + hi) // 2
+        folded = _fold_to_k(labels, loads, pwidths, dop, mid)
+        if folded is not None:
+            tt = evaluate(folded)
+            if tt <= deadline * (1 + 1e-9):
+                hi = mid
+                best_labels, best_t = folded, tt
+                continue
+        lo = mid + 1
+    return best_labels, best_t
 
 
 def min_res(pgt, deadline: float, dop: int = 8,

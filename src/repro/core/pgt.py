@@ -360,7 +360,9 @@ class CompiledPGT:
         # lazy CSR caches
         self._out: Optional[
             Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
-        self._in: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._in_eid: Optional[
+            Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        self._indeg: Optional[np.ndarray] = None
         self._levels: Optional[np.ndarray] = None
         self._order: Optional[np.ndarray] = None
         if validate_dag:
@@ -560,15 +562,41 @@ class CompiledPGT:
 
     def in_csr(self) -> Tuple[np.ndarray, np.ndarray]:
         """(indptr, src_ids) adjacency sorted by destination drop id."""
-        if self._in is None:
-            indptr, cols, _ = coo_to_csr(self.num_drops, self.edge_dst,
-                                         self.edge_src)
-            self._in = (indptr, cols)
-        return self._in
+        indptr, cols, _ = self.in_csr_with_eid()
+        return indptr, cols
+
+    def in_csr_with_eid(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(indptr, src_ids, edge_ids): reverse CSR plus the COO->CSR
+        permutation, so per-edge attributes (streaming) can be gathered in
+        incoming order — what the frontier scheduler consumes."""
+        if self._in_eid is None:
+            self._in_eid = coo_to_csr(self.num_drops, self.edge_dst,
+                                      self.edge_src)
+        return self._in_eid
+
+    def in_degrees(self) -> np.ndarray:
+        """Per-drop incoming edge count (the frontier scheduler's
+        ``pending_inputs`` seed)."""
+        if self._indeg is None:
+            self._indeg = np.bincount(
+                self.edge_dst, minlength=self.num_drops).astype(np.int64)
+        return self._indeg
+
+    def group_idx_arr(self) -> np.ndarray:
+        """Per-drop index into ``self.groups`` as a flat int32 array.
+
+        Memoised into ``_group_idx`` (``group_of`` then uses the direct
+        lookup instead of bisect — same mapping, derived from the
+        contiguous group bases)."""
+        if self._group_idx is None:
+            counts = np.fromiter((g.count for g in self.groups),
+                                 dtype=np.int64, count=len(self.groups))
+            self._group_idx = np.repeat(
+                np.arange(len(self.groups), dtype=np.int32), counts)
+        return self._group_idx
 
     def root_ids(self) -> np.ndarray:
-        indeg = np.bincount(self.edge_dst, minlength=self.num_drops)
-        return np.flatnonzero(indeg == 0)
+        return np.flatnonzero(self.in_degrees() == 0)
 
     def topological_order_ids(self) -> np.ndarray:
         if self._order is None:

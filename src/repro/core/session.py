@@ -4,6 +4,15 @@
 lifecycle: they are first created, then a complete or a partial PG is attached
 to them, after which the graph can be deployed.  This leaves the session in a
 running state until the graph has finished its execution."
+
+Two session flavours share the same monitoring/checkpoint API:
+
+* :class:`Session` — one Python :class:`~repro.core.drop.Drop` object per
+  graph node, event-driven (the paper's object engine; the semantic oracle),
+* :class:`CompiledSession` — drop state held in flat numpy arrays over a
+  :class:`~repro.core.pgt.CompiledPGT`, executed wave-by-wave by the
+  frontier scheduler in :mod:`repro.core.exec_compiled`.  No per-drop
+  Python objects exist; payload values live in one dense table.
 """
 from __future__ import annotations
 
@@ -15,8 +24,12 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
 from .drop import AppDrop, DataDrop, Drop, DropState, MemoryPayload
 from .events import EventBus
+from .pgt import KIND_DATA, CompiledPGT
+from .util import safe_uid as _safe
 
 
 class SessionState(str, enum.Enum):
@@ -205,5 +218,239 @@ class Session:
         self._check_finished()
 
 
-def _safe(uid: str) -> str:
-    return uid.replace("/", "_").replace("#", "_").replace(".", "_")
+# ---------------------------------------------------------------------------
+# Compiled sessions — array-native drop state (no per-drop Python objects)
+# ---------------------------------------------------------------------------
+
+# int8 drop-state codes used by CompiledSession / the frontier scheduler
+ST_INIT = 0
+ST_COMPLETED = 1
+ST_ERROR = 2
+ST_CANCELLED = 3
+ST_SKIPPED = 4
+
+_ST_NAMES = (DropState.INITIALIZED.value, DropState.COMPLETED.value,
+             DropState.ERROR.value, DropState.CANCELLED.value,
+             DropState.SKIPPED.value)
+
+# payload-kind codes (per data drop)
+PK_MEMORY = 0
+PK_FILE = 1
+PK_NULL = 2
+_PK_CODE_OF = {"memory": PK_MEMORY, "file": PK_FILE, "null": PK_NULL}
+
+
+class CompiledDropRef:
+    """Tiny uid/state/error view over one row of a CompiledSession
+    (what ``errors()`` returns; duck-types the bits of ``Drop`` that the
+    engine and monitoring consume).  Also the base for the app-function
+    shims in :mod:`repro.core.exec_compiled`."""
+
+    __slots__ = ("s", "idx")
+
+    def __init__(self, session: "CompiledSession", idx: int) -> None:
+        self.s = session
+        self.idx = idx
+
+    @property
+    def session(self) -> "CompiledSession":
+        return self.s
+
+    @property
+    def uid(self) -> str:
+        return self.s.pgt.uid_of(self.idx)
+
+    @property
+    def state(self) -> DropState:
+        return DropState(_ST_NAMES[self.s.drop_state[self.idx]])
+
+    @property
+    def error_info(self) -> Optional[str]:
+        return self.s.error_info.get(self.idx)
+
+    @property
+    def node(self) -> Optional[str]:
+        nid = self.s.pgt.node_ids[self.idx]
+        return None if nid < 0 else self.s.pgt.node_names[nid]
+
+    def read(self) -> Any:
+        return self.s._read_idx(self.idx)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{type(self).__name__} {self.uid} {self.state.value}>"
+
+
+class CompiledSession:
+    """A session executing directly on ``CompiledPGT`` arrays.
+
+    Shares the :class:`Session` monitoring/lifecycle API — ``status()``,
+    ``wait()``, ``errors()``, ``checkpoint()``/``restore()``, ``cancel()``
+    — but holds *all* drop state in flat arrays:
+
+    * ``drop_state``  — int8 state codes (``ST_*``),
+    * ``payloads`` / ``payload_present`` — dense value table for data
+      drops (the vectorised equivalent of per-drop ``MemoryPayload``),
+    * ``error_info`` — sparse ``{drop id: message}`` map,
+    * ``node_slices`` — per-node drop-id index arrays, filled by the
+      batched deploy (``MasterDropManager.deploy_compiled``).
+
+    Execution is driven by :func:`repro.core.exec_compiled.execute_frontier`
+    — the session itself is pure state + bookkeeping.
+    """
+
+    def __init__(self, session_id: str, pgt: CompiledPGT,
+                 bus: Optional[EventBus] = None) -> None:
+        self.session_id = session_id
+        self.pgt = pgt
+        self.bus = bus or EventBus()
+        self.state = SessionState.PRISTINE
+        n = pgt.num_drops
+        self.num_drops = n
+        self.drop_state = np.zeros(n, dtype=np.int8)
+        self.payloads = np.full(n, None, dtype=object)   # dense value table
+        self.payload_present = np.zeros(n, dtype=bool)
+        self.error_info: Dict[int, str] = {}
+        self.node_slices: Dict[str, np.ndarray] = {}
+        self.cross_node_edges = 0          # stat recorded at deploy
+        self._finished = threading.Event()
+        self.created_at = time.monotonic()
+        # payload-kind code per drop (PK_*; apps carry PK_MEMORY, unused)
+        gidx = pgt.group_idx_arr()
+        gpk = np.fromiter(
+            (_PK_CODE_OF.get(g.payload_kind, PK_MEMORY) for g in pgt.groups),
+            dtype=np.int8, count=len(pgt.groups))
+        self.payload_kind = gpk[gidx] if len(pgt.groups) else \
+            np.zeros(n, dtype=np.int8)
+
+    # -- lifecycle ---------------------------------------------------------
+    def deploy(self) -> None:
+        self.state = SessionState.DEPLOYING
+
+    def start(self) -> None:
+        self.state = SessionState.RUNNING
+
+    def finish(self) -> None:
+        self.state = SessionState.FINISHED
+        self._finished.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._finished.wait(timeout)
+
+    def cancel(self) -> None:
+        self.drop_state[self.drop_state == ST_INIT] = ST_CANCELLED
+        self.state = SessionState.CANCELLED
+        self._finished.set()
+
+    # -- data access (input seeding / result readout) ----------------------
+    def index_of(self, uid: str) -> int:
+        return self.pgt.index_of(uid)
+
+    def write(self, uid: str, value: Any) -> None:
+        """Seed an input payload (root data drops, pre-execution).
+
+        State guard matches the object oracle: ``Drop.write`` only
+        accepts writes before the drop is terminal."""
+        from .drop import PayloadError
+        idx = self.index_of(uid)
+        if self.pgt.kind_arr[idx] != KIND_DATA:
+            raise ValueError(f"cannot write app drop {uid!r}")
+        if self.drop_state[idx] != ST_INIT:
+            raise PayloadError(f"cannot write drop {uid} in state "
+                               f"{_ST_NAMES[self.drop_state[idx]]}")
+        self.payloads[idx] = value
+        self.payload_present[idx] = True
+
+    def read(self, uid: str) -> Any:
+        return self._read_idx(self.index_of(uid))
+
+    def _read_idx(self, idx: int) -> Any:
+        from .drop import PayloadError
+        if self.payload_kind[idx] == PK_NULL:
+            return None
+        if not self.payload_present[idx]:
+            if self.payload_kind[idx] == PK_FILE:
+                path = self._file_path(idx)
+                if Path(path).exists():
+                    with open(path, "rb") as fh:
+                        return pickle.load(fh)
+            raise PayloadError("payload not present")
+        return self.payloads[idx]
+
+    def _write_idx(self, idx: int, value: Any) -> None:
+        """Payload write from a producing app (registry shim path)."""
+        self.payloads[idx] = value
+        self.payload_present[idx] = True
+        if self.payload_kind[idx] == PK_FILE:
+            path = Path(self._file_path(idx))
+            path.parent.mkdir(parents=True, exist_ok=True)
+            with open(path, "wb") as fh:
+                pickle.dump(value, fh, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def state_of(self, uid: str) -> DropState:
+        return DropState(_ST_NAMES[self.drop_state[self.index_of(uid)]])
+
+    def _file_path(self, idx: int) -> str:
+        params = self.pgt.params_of(idx)
+        return params.get(
+            "path", f"/tmp/repro_drops/{_safe(self.pgt.uid_of(idx))}.pkl")
+
+    # -- monitoring ----------------------------------------------------------
+    def status(self) -> Dict[str, int]:
+        counts = np.bincount(self.drop_state, minlength=len(_ST_NAMES))
+        return {_ST_NAMES[c]: int(v)
+                for c, v in enumerate(counts) if v}
+
+    def errors(self) -> List[CompiledDropRef]:
+        return [CompiledDropRef(self, int(i))
+                for i in np.flatnonzero(self.drop_state == ST_ERROR)]
+
+    # -- checkpoint / restart ------------------------------------------------
+    def checkpoint(self, directory: str,
+                   spill_payloads: bool = True) -> str:
+        """Persist the state arrays (+ present payload values) — the
+        array-native analogue of ``Session.checkpoint``."""
+        path = Path(directory)
+        path.mkdir(parents=True, exist_ok=True)
+        np.save(path / "drop_state.npy", self.drop_state)
+        if spill_payloads:
+            present = np.flatnonzero(self.payload_present)
+            values = {int(i): self.payloads[int(i)] for i in present}
+            with open(path / "payloads.pkl", "wb") as fh:
+                pickle.dump(values, fh, protocol=pickle.HIGHEST_PROTOCOL)
+        manifest = path / "compiled_session.json"
+        with open(manifest, "w") as fh:
+            json.dump({"session_id": self.session_id,
+                       "num_drops": self.num_drops,
+                       "format": "compiled-v1",
+                       "spill_payloads": bool(spill_payloads),
+                       "errors": {str(i): msg
+                                  for i, msg in self.error_info.items()}},
+                      fh)
+        return str(manifest)
+
+    def restore(self, directory: str) -> None:
+        """Restore state arrays from a checkpoint into this session.
+        Execution can then continue with ``execute_frontier`` (the
+        scheduler derives ``pending_inputs`` from terminal states)."""
+        path = Path(directory)
+        with open(path / "compiled_session.json") as fh:
+            data = json.load(fh)
+        if data.get("num_drops") != self.num_drops:
+            raise ValueError(
+                f"checkpoint has {data.get('num_drops')} drops, session "
+                f"graph has {self.num_drops}")
+        self.drop_state = np.load(path / "drop_state.npy")
+        self.error_info = {int(i): msg
+                           for i, msg in data.get("errors", {}).items()}
+        ppath = path / "payloads.pkl"
+        if data.get("spill_payloads") and ppath.exists():
+            with open(ppath, "rb") as fh:
+                values = pickle.load(fh)
+            self.payloads = np.full(self.num_drops, None, dtype=object)
+            self.payload_present = np.zeros(self.num_drops, dtype=bool)
+            for i, v in values.items():
+                self.payloads[i] = v
+                self.payload_present[i] = True
+        self._finished.clear()
+        if bool((self.drop_state != ST_INIT).all()):
+            self.finish()

@@ -1,0 +1,442 @@
+"""Compiled vs object execution equivalence (the PR-2 contract).
+
+The object engine (`drop.py` + `session.py`) is the semantic oracle; the
+compiled path (`exec_compiled.py` frontier scheduler over `CompiledPGT`)
+must agree on final status counts, error propagation, per-drop payload
+values for memory drops, and checkpoint/restore round-trips — across
+chain / fan-out / fan-in / multi-island topologies.
+"""
+import pytest
+
+from repro.core import (CompiledSession, DropState, Pipeline,
+                        execute_frontier, register_app)
+from repro.core.session import ST_COMPLETED
+from repro.dsl import GraphBuilder
+
+
+@register_app("eq_double")
+def _double(inputs, outputs, app):
+    v = sum(i.read() for i in inputs) if inputs else 1
+    for o in outputs:
+        o.write(v * 2)
+
+
+@register_app("eq_sum")
+def _sum(inputs, outputs, app):
+    v = sum(i.read() for i in inputs)
+    for o in outputs:
+        o.write(v)
+
+
+@register_app("eq_fail")
+def _fail(inputs, outputs, app):
+    raise RuntimeError("intentional failure")
+
+
+@register_app("eq_slow")
+def _slow(inputs, outputs, app):
+    import time
+    time.sleep(0.02)
+    for o in outputs:
+        o.write(None)
+
+
+@register_app("eq_emit_oid")
+def _emit_oid(inputs, outputs, app):
+    for o in outputs:
+        o.write(tuple(app.meta["oid"]))
+
+
+# ---------------------------------------------------------------------------
+# topologies
+# ---------------------------------------------------------------------------
+
+
+def chain_lg():
+    g = GraphBuilder("chain")
+    g.data("src")
+    g.component("a1", app="eq_double")
+    g.data("d1")
+    g.component("a2", app="eq_double")
+    g.data("d2")
+    g.component("a3", app="identity")
+    g.data("out")
+    g.chain("src", "a1", "d1", "a2", "d2", "a3", "out")
+    return g.graph()
+
+
+def fan_lg(width=4):
+    """Fan-out (scatter) then fan-in (gather)."""
+    g = GraphBuilder("fan")
+    g.data("src", volume=100)
+    with g.scatter("sc", width):
+        g.component("work", app="eq_double", time=0.001)
+        g.data("mid", volume=50)
+    with g.gather("ga", width):
+        g.component("reduce", app="eq_sum", time=0.001)
+    g.data("final")
+    g.chain("src", "work", "mid", "reduce", "final")
+    return g.graph()
+
+
+def error_lg():
+    g = GraphBuilder("err")
+    g.data("src")
+    g.component("bad", app="eq_fail")
+    g.data("mid")
+    g.component("next", app="eq_sum")
+    g.data("out")
+    g.chain("src", "bad", "mid", "next", "out")
+    return g.graph()
+
+
+def threshold_lg():
+    """One of two inputs fails; t=50% lets the aggregate still run."""
+    g = GraphBuilder("tol")
+    g.data("s1")
+    g.data("s2")
+    g.component("ok", app="identity")
+    g.component("bad", app="eq_fail")
+    g.data("d1")
+    g.data("d2")
+    g.component("agg", app="eq_sum", error_threshold=0.5)
+    g.data("out")
+    g.chain("s1", "ok", "d1", "agg")
+    g.chain("s2", "bad", "d2", "agg")
+    g.connect("agg", "out")
+    return g.graph()
+
+
+def run_both(lg_factory, inputs=None, num_nodes=2, num_islands=1):
+    """Run the same LG through both engines; return (obj report+session,
+    compiled report+session)."""
+    with Pipeline(num_nodes=num_nodes, num_islands=num_islands,
+                  execution="objects") as p:
+        rep_o = p.run(lg_factory(), inputs=dict(inputs or {}))
+        states_o = {u: d.state for u, d in p.session.drops.items()}
+        values_o = {u: _try_read(d) for u, d in p.session.drops.items()
+                    if d.state is DropState.COMPLETED}
+    with Pipeline(num_nodes=num_nodes, num_islands=num_islands,
+                  execution="compiled") as p:
+        rep_c = p.run(lg_factory(), inputs=dict(inputs or {}))
+        s = p.session
+        states_c = {u: s.state_of(u) for u in states_o}
+        values_c = {u: _try_read_compiled(s, u) for u in values_o}
+    return rep_o, states_o, values_o, rep_c, states_c, values_c
+
+
+_ABSENT = object()
+
+
+def _try_read(d):
+    try:
+        return d.read()
+    except Exception:
+        return _ABSENT
+
+
+def _try_read_compiled(s, uid):
+    try:
+        return s.read(uid)
+    except Exception:
+        return _ABSENT
+
+
+# ---------------------------------------------------------------------------
+# status / payload equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestStatusEquivalence:
+    @pytest.mark.parametrize("factory,inputs", [
+        (chain_lg, {"src": 3}),
+        (fan_lg, {"src": 3}),
+        (error_lg, {"src": 1}),
+        (threshold_lg, {"s1": 5, "s2": 7}),
+    ])
+    def test_counts_states_and_values_agree(self, factory, inputs):
+        rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(factory, inputs)
+        assert rep_c.status_counts == rep_o.status_counts
+        assert st_c == st_o
+        assert val_c == val_o
+
+    def test_multi_island(self):
+        rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(
+            fan_lg, {"src": 2}, num_nodes=4, num_islands=2)
+        assert rep_o.ok and rep_c.ok
+        assert st_c == st_o
+        assert val_c["final"] == val_o["final"] == 16
+
+    def test_fan_in_values(self):
+        """Gather consumes inputs in deterministic (oid, uid) order."""
+        g = GraphBuilder("oids")
+        with g.scatter("sc", 3):
+            g.component("emit", app="eq_emit_oid")
+            g.data("pt")
+        with g.gather("ga", 3):
+            g.component("collect", app="identity")
+            g.data("grp")
+        g.chain("emit", "pt", "collect", "grp")
+        rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(lambda: g.graph())
+        assert rep_o.ok and rep_c.ok
+        assert val_c["grp#0"] == val_o["grp#0"] == [(0,), (1,), (2,)]
+
+    def test_noop_graph_all_completed(self):
+        def lg():
+            g = GraphBuilder("noops")
+            g.data("src")
+            with g.scatter("sc", 8):
+                g.component("w", app="noop")
+                g.data("d")
+            with g.gather("ga", 8):
+                g.component("r", app="noop")
+            g.data("out")
+            g.chain("src", "w", "d", "r", "out")
+            return g.graph()
+        rep_o, st_o, _, rep_c, st_c, _ = run_both(lg)
+        assert rep_o.ok and rep_c.ok
+        # src + 8 w + 8 d + 1 gather app + out
+        assert rep_c.status_counts == rep_o.status_counts == {
+            "COMPLETED": 19}
+
+    def test_loop_graph_via_dict_fallback(self):
+        """Loop-carried graphs unroll via the dict path; the compiled
+        engine lifts them with from_dict_pgt and must still agree."""
+        def lg():
+            g = GraphBuilder("loop")
+            g.data("init")
+            g.component("seed", app="identity")
+            with g.loop("lp", 5):
+                g.data("x", loop_entry=True)
+                g.component("inc", app="eq_double")
+                g.data("y", loop_exit=True, carries="x")
+            g.chain("init", "seed", "x", "inc", "y")
+            return g.graph()
+        rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(
+            lg, {"init": 1})
+        assert rep_o.ok and rep_c.ok
+        assert st_c == st_o
+        assert val_c["y#4"] == val_o["y#4"] == 2 ** 5
+
+
+class TestErrorPropagation:
+    def test_cascade_states(self):
+        _, st_o, _, _, st_c, _ = run_both(error_lg, {"src": 1})
+        for uid in ("bad", "mid", "next", "out"):
+            assert st_o[uid] is DropState.ERROR
+            assert st_c[uid] is DropState.ERROR
+
+    def test_threshold_gate(self):
+        _, st_o, val_o, _, st_c, val_c = run_both(
+            threshold_lg, {"s1": 5, "s2": 7})
+        assert st_c["d2"] is DropState.ERROR
+        assert st_c["agg"] is DropState.COMPLETED
+        assert val_c["out"] == val_o["out"] == 5   # surviving input only
+
+    def test_unseeded_memory_input_errors_reader(self):
+        """identity on an absent memory payload raises in both engines."""
+        def lg():
+            g = GraphBuilder("absent")
+            g.data("src")
+            g.component("r", app="identity")
+            g.data("out")
+            g.chain("src", "r", "out")
+            return g.graph()
+        _, st_o, _, _, st_c, _ = run_both(lg)   # src never written
+        assert st_o["r"] is DropState.ERROR
+        assert st_c["r"] is DropState.ERROR
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore
+# ---------------------------------------------------------------------------
+
+
+class TestCompiledCheckpoint:
+    def test_round_trip(self, tmp_path):
+        with Pipeline(num_nodes=2, execution="compiled") as p:
+            rep = p.run(fan_lg(), inputs={"src": 3})
+            assert rep.ok
+            ck = tmp_path / "ck"
+            p.session.checkpoint(str(ck))
+            want_status = p.session.status()
+            want_final = p.session.read("final")
+
+        with Pipeline(num_nodes=2, execution="compiled") as p2:
+            p2.translate(fan_lg())
+            p2.deploy()
+            p2.session.restore(str(ck))
+            assert p2.session.status() == want_status
+            assert p2.session.read("final") == want_final
+            assert p2.session.wait(1)   # all terminal -> finished
+
+    def test_resume_partial_execution(self, tmp_path):
+        """Checkpoint a partially-executed state, restore into a fresh
+        deployment, and let the frontier scheduler finish the rest."""
+        with Pipeline(num_nodes=2, execution="compiled") as p:
+            p.translate(fan_lg())
+            p.deploy()
+            s = p.session
+            s.write("src", 3)
+            s.drop_state[s.index_of("src")] = ST_COMPLETED
+            s.checkpoint(str(tmp_path / "mid"))
+
+        with Pipeline(num_nodes=2, execution="compiled") as p2:
+            p2.translate(fan_lg())
+            p2.deploy()
+            s2 = p2.session
+            s2.restore(str(tmp_path / "mid"))
+            assert s2.state_of("src") is DropState.COMPLETED
+            assert execute_frontier(s2, timeout=10)
+            assert s2.read("final") == 24
+            assert s2.status() == {"COMPLETED": 11}
+
+
+# ---------------------------------------------------------------------------
+# deploy-layer regressions
+# ---------------------------------------------------------------------------
+
+
+class TestDeploy:
+    def test_cross_node_edges_scoped_per_session(self):
+        """Regression: island cross-node edge records used to accumulate
+        across sessions (and got re-scanned by later deployments)."""
+        with Pipeline(num_nodes=4, num_islands=2) as p:
+            rep1 = p.run(fan_lg(), inputs={"src": 1})
+            assert rep1.ok
+            islands = list(p.master.islands.values())
+            # deploy a second session of the same shape on the same master
+            p.translate(fan_lg())
+            p.deploy()
+            rep2 = p.execute(inputs={"src": 2})
+            assert rep2.ok
+            for im in islands:
+                for sid, rec in im.cross_node_edges.items():
+                    assert rec, f"empty record kept for {sid}"
+            assert p.session.drops["final"].read() == 16
+
+    def test_compiled_deploy_slices_cover_all_drops(self):
+        with Pipeline(num_nodes=3, execution="compiled") as p:
+            p.translate(fan_lg())
+            p.deploy()
+            s = p.session
+            total = sum(len(v) for v in s.node_slices.values())
+            assert total == len(p.pgt)
+            for node, idx in s.node_slices.items():
+                assert (p.pgt.node_ids[idx] ==
+                        p.pgt.node_id_for(node)).all()
+
+    def test_compiled_deploy_requires_mapping(self):
+        from repro.core import CompiledSession, unroll
+        with Pipeline(num_nodes=2, execution="compiled") as p:
+            pgt = unroll(fan_lg())
+            sess = CompiledSession("s-x", pgt)
+            with pytest.raises(ValueError, match="not mapped"):
+                p.master.deploy_compiled(sess, pgt)
+
+    def test_compiled_timeout_mid_wave_and_resume(self):
+        """A wide wave of slow Python apps must honour the deadline
+        mid-wave, report TIMEOUT, and be resumable afterwards."""
+        def lg():
+            g = GraphBuilder("slow")
+            g.data("src")
+            with g.scatter("sc", 20):
+                g.component("w", app="eq_slow", time=0.0)
+                g.data("d")
+            return g.graph()
+        with Pipeline(num_nodes=2, execution="compiled") as p:
+            p.translate(lg())
+            p.deploy()
+            rep = p.execute(timeout=0.1, inputs={"src": 1})
+            assert rep.state == "TIMEOUT"
+            assert rep.status_counts.get("INITIALIZED", 0) > 0
+            # resume: the scheduler re-derives its counters and finishes
+            assert execute_frontier(p.session, timeout=30)
+            assert p.session.status() == {"COMPLETED": 41}
+
+    def test_reregistered_builtin_bypasses_fast_path(self):
+        """Re-registering 'noop' must reach the compiled engine too (the
+        vectorised fast path only applies to the builtin implementation)."""
+        from repro.core.managers import _APP_REGISTRY
+        original = _APP_REGISTRY["noop"]
+
+        def custom_noop(inputs, outputs, app):
+            for o in outputs:
+                o.write("sentinel")
+        _APP_REGISTRY["noop"] = custom_noop
+        try:
+            def lg():
+                g = GraphBuilder("ovr")
+                g.data("src")
+                g.component("w", app="noop")
+                g.data("out")
+                g.chain("src", "w", "out")
+                return g.graph()
+            with Pipeline(num_nodes=1, execution="compiled") as p:
+                rep = p.run(lg(), inputs={"src": 1})
+                assert rep.ok
+                assert p.session.read("out") == "sentinel"
+        finally:
+            _APP_REGISTRY["noop"] = original
+
+    def test_compiled_rejects_object_services(self):
+        with pytest.raises(ValueError, match="compiled execution"):
+            Pipeline(execution="compiled", enable_dlm=True)
+        with pytest.raises(ValueError, match="unknown execution"):
+            Pipeline(execution="bogus")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random layered graphs agree (cheap tier; skipped when the
+# optional dev dependency is absent — tier-1 stays green without it)
+# ---------------------------------------------------------------------------
+
+def _layered_lg(width, depth, apps, inject_error):
+    g = GraphBuilder("rand")
+    g.data("src")
+    with g.scatter("sc", width):
+        for i in range(depth):
+            app = "eq_fail" if inject_error and i == depth - 1 \
+                else apps[i % len(apps)]
+            g.component(f"w{i}", app=app, time=0.0)
+            g.data(f"d{i}")
+    with g.gather("ga", width):
+        g.component("r", app="eq_sum", error_threshold=0.0)
+    g.data("out")
+    names = ["src"]
+    for i in range(depth):
+        names += [f"w{i}", f"d{i}"]
+    names += ["r", "out"]
+    g.chain(*names)
+    return g.graph()
+
+
+def _check_layered_equivalence(width, depth, apps, inject_error):
+    rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(
+        lambda: _layered_lg(width, depth, apps, inject_error), {"src": 1})
+    assert rep_c.status_counts == rep_o.status_counts
+    assert st_c == st_o
+    assert val_c == val_o
+
+
+def test_layered_equivalence_examples():
+    """Deterministic spot checks of the random-topology property (run
+    even without hypothesis)."""
+    _check_layered_equivalence(3, 2, ["identity", "eq_double", "noop"],
+                               False)
+    _check_layered_equivalence(2, 3, ["eq_double", "noop", "identity"],
+                               True)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    pass
+else:
+    @settings(max_examples=15, deadline=None)
+    @given(width=st.integers(1, 5), depth=st.integers(1, 3),
+           apps=st.lists(st.sampled_from(["identity", "eq_double", "noop"]),
+                         min_size=3, max_size=3),
+           inject_error=st.booleans())
+    def test_random_layered_equivalence(width, depth, apps, inject_error):
+        _check_layered_equivalence(width, depth, apps, inject_error)

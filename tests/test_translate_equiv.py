@@ -173,6 +173,32 @@ def test_array_min_res_does_not_overshoot_meetable_deadline():
     assert res.num_partitions == 2
 
 
+@pytest.mark.parametrize("seed", range(6))
+def test_array_min_res_binary_search_vs_dict_packer(seed):
+    """The array path's binary search on the partition count (over the
+    exact-sim evaluator) vs the dict path's greedy topological packer on
+    small graphs: both must meet a meetable deadline, and the array path
+    must not need more partitions than the greedy packer."""
+    lg = random_layered_lg(seed)
+    dic = unroll_dict(lg)
+    dop = 2 + seed % 3
+    # a meetable-but-not-loose deadline: halfway between the unpartitioned
+    # critical path and the fully-serialised trivial assignment
+    for i, s in enumerate(dic.drops.items()):
+        dic.drops[s[0]].partition = i
+    trivial = simulate_makespan(dic, dop=dop)
+    lower = critical_path(dic, partitioned=False)
+    deadline = lower + 0.5 * (trivial - lower)
+    res_dict = min_res(dic, deadline=deadline, dop=dop)
+    csr = unroll(lg)
+    res_arr = min_res(csr, deadline=deadline, dop=dop)
+    assert res_dict.makespan <= deadline * (1 + 1e-6)
+    assert res_arr.makespan <= deadline * (1 + 1e-6)
+    # the canonical simulator agrees with the reported makespans
+    assert simulate_makespan(csr, dop=dop) == pytest.approx(res_arr.makespan)
+    assert res_arr.num_partitions <= res_dict.num_partitions
+
+
 @pytest.mark.parametrize("outer,inner", [(3, 2), (4, 4), (2, 8)])
 def test_corner_turn_equivalence(outer, inner):
     lg = corner_turn_lg(outer, inner)
