@@ -15,20 +15,32 @@ Fig. 8 metric (execution overhead per drop), and compiled-over-objects
 speedup.  Results also land as JSON in ``results/bench_execute.json``
 (alongside the existing dryrun results) for CI trending.
 
+The ``recovery`` tier measures the resilience subsystem
+(``core.resilience``): kill 1 of N nodes at 50% completion mid-run and
+report the recovery latency (lost-set closure + remap + slice
+re-registration) and the re-executed-drop count next to the clean
+execute wall time — the acceptance bar is recovery overhead < 10% of
+the original execute time.
+
 Usage:
   python benchmarks/bench_execute.py                 # full tier suite
   python benchmarks/bench_execute.py --tiers 1000    # quick tier only
   python benchmarks/bench_execute.py --max-object-drops 10000
+  python benchmarks/bench_execute.py --tier recovery # 100k-drop recovery
 """
 from __future__ import annotations
 
 import argparse
+import gc
 import json
+import statistics
 import time
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.core import Pipeline
+import numpy as np
+
+from repro.core import FailureScript, Pipeline, ResilienceConfig
 from repro.dsl import GraphBuilder
 
 # drops per unit width in make_lg: src + width*(w, d, w2, d2) + r + out
@@ -38,16 +50,20 @@ RESULTS_PATH = Path(__file__).resolve().parents[1] / "results" / \
     "bench_execute.json"
 
 
-def make_lg(width: int):
+def make_lg(width: int, weighted: bool = False):
+    # weighted: nonzero cost-model weights so the mapper spreads drops
+    # over all nodes (zero-weight ties collapse onto node0 — fine for
+    # throughput, useless for killing a node)
+    t, v = (1.0, 1.0) if weighted else (0.0, 0.0)
     g = GraphBuilder(f"ex{width}")
-    g.data("src")
+    g.data("src", volume=v)
     with g.scatter("sc", width):
-        g.component("w", app="noop", time=0.0)
-        g.data("d")
-        g.component("w2", app="identity", time=0.0)
-        g.data("d2")
+        g.component("w", app="noop", time=t)
+        g.data("d", volume=v)
+        g.component("w2", app="identity", time=t)
+        g.data("d2", volume=v)
     with g.gather("ga", width):
-        g.component("r", app="noop", time=0.0)
+        g.component("r", app="noop", time=t)
     g.data("out")
     g.chain("src", "w", "d", "w2", "d2", "r", "out")
     return g.graph()
@@ -78,6 +94,76 @@ def run_tier(target_drops: int, execution: str,
     }
 
 
+def run_recovery_tier(target_drops: int, num_nodes: int = 8,
+                      at_fraction: float = 0.5, repeats: int = 5,
+                      timeout: float = 600.0) -> Dict[str, float]:
+    """Kill 1 of ``num_nodes`` nodes at ``at_fraction`` completion;
+    report recovery latency + re-executed drops vs the clean execute wall
+    time of the same graph.  Each measurement is the median over
+    ``repeats`` runs (single-shot ms-scale walls are noise-dominated on
+    shared machines).
+
+    Placement is stamped round-robin (each node holds ~1/N of the graph)
+    — this benchmarks the recovery path, not the partition mapper, and
+    the mapper's coarsening can skew drop counts badly on uniform
+    graphs."""
+    width = max(target_drops // DROPS_PER_WIDTH, 1)
+
+    def deploy_round_robin(p: Pipeline) -> None:
+        p.translate(make_lg(width, weighted=True))
+        p.deploy()
+        pgt = p.pgt
+        ids = np.array([pgt.node_id_for(f"node{k}")
+                        for k in range(num_nodes)], dtype=np.int32)
+        pgt.node_ids[:] = ids[np.arange(len(pgt)) % num_nodes]
+        p.master.refresh_compiled_slices(p.session, pgt)
+
+    clean_walls: List[float] = []
+    n = 0
+    for _ in range(repeats):
+        with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
+                      execution="compiled") as p:
+            deploy_round_robin(p)
+            rep = p.execute(timeout=timeout, inputs={"src": 1})
+            assert rep.ok, (rep.state, rep.errors[:3])
+            clean_walls.append(rep.wall_time)
+            n = sum(rep.status_counts.values())
+
+    victim = f"node{num_nodes - 1}"
+    recovery_walls: List[float] = []
+    resilient_walls: List[float] = []
+    recovered = 0
+    for rep_i in range(repeats + 1):
+        with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
+                      execution="compiled") as p:
+            deploy_round_robin(p)
+            p.resilience = ResilienceConfig(
+                failures=[FailureScript(victim, at_fraction=at_fraction)])
+            gc.collect()   # keep GC pauses out of the ms-scale recovery
+            rep = p.execute(timeout=timeout, inputs={"src": 1})
+            assert rep.ok, (rep.state, rep.errors[:3])
+            if rep_i == 0:
+                continue   # warmup: first-call allocator/import costs
+            recovery_walls.append(p.fault_manager.stats.recovery_seconds)
+            resilient_walls.append(rep.wall_time)
+            recovered = rep.recovered_drops
+    clean_s = statistics.median(clean_walls)
+    recovery_s = statistics.median(recovery_walls)
+    return {
+        "tier": target_drops,
+        "mode": "recovery",
+        "drops": n,
+        "victim": victim,
+        "num_nodes": num_nodes,
+        "execute_clean_s": round(clean_s, 4),
+        "execute_resilient_s": round(statistics.median(resilient_walls), 4),
+        "recovery_s": round(recovery_s, 4),
+        "recovered_drops": recovered,
+        "recovery_frac_of_execute": round(recovery_s / max(clean_s, 1e-9),
+                                          4),
+    }
+
+
 def run(tiers=(1_000, 10_000, 100_000),
         max_object_drops: Optional[int] = None) -> List[Dict[str, float]]:
     rows: List[Dict[str, float]] = []
@@ -95,8 +181,13 @@ def run(tiers=(1_000, 10_000, 100_000),
     return rows
 
 
-def emit(rows: List[Dict[str, float]]) -> None:
+def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
     for r in rows:
+        if r["mode"] == "recovery":
+            print(f"execute_recovery_s[n={r['drops']}],{r['recovery_s']},"
+                  f"recovered={r['recovered_drops']};"
+                  f"frac_of_execute={r['recovery_frac_of_execute']}")
+            continue
         extra = (f"deploy_s={r['deploy_s']};execute_s={r['execute_s']};"
                  f"overhead_us={r['overhead_us_per_drop']}")
         if "speedup_compiled" in r:
@@ -104,6 +195,14 @@ def emit(rows: List[Dict[str, float]]) -> None:
         print(f"execute_{r['mode']}_drops_per_s[n={r['drops']}],"
               f"{r['drops_per_s']:.2f},{extra}")
     RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    if merge and RESULTS_PATH.exists():
+        # keep every other (mode, tier) cell — a partial run (e.g. the
+        # CI 10k smoke) must not delete the other tiers' trend rows
+        with open(RESULTS_PATH) as fh:
+            old = json.load(fh).get("rows", [])
+        new_keys = {(r["mode"], r["tier"]) for r in rows}
+        rows = [r for r in old
+                if (r.get("mode"), r.get("tier")) not in new_keys] + rows
     with open(RESULTS_PATH, "w") as fh:
         json.dump({"benchmark": "bench_execute", "rows": rows}, fh,
                   indent=2)
@@ -112,14 +211,21 @@ def emit(rows: List[Dict[str, float]]) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--tiers", type=int, nargs="+",
-                    default=[1_000, 10_000, 100_000],
+    ap.add_argument("--tier", choices=["standard", "recovery"],
+                    default="standard",
+                    help="'recovery' = node-kill + lineage-recovery suite")
+    ap.add_argument("--tiers", type=int, nargs="+", default=None,
                     help="target drop counts")
     ap.add_argument("--max-object-drops", type=int, default=None,
                     help="skip the object engine above this tier "
                          "(it needs ~100us+ per drop)")
     args = ap.parse_args()
-    emit(run(tuple(args.tiers), args.max_object_drops))
+    if args.tier == "recovery":
+        tiers = tuple(args.tiers or [100_000])
+        emit([run_recovery_tier(t) for t in tiers], merge=True)
+    else:
+        tiers = tuple(args.tiers or [1_000, 10_000, 100_000])
+        emit(run(tiers, args.max_object_drops), merge=True)
 
 
 if __name__ == "__main__":

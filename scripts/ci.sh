@@ -19,4 +19,6 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/bench_translate.py --width 10000
     echo "== execute smoke bench (10k drops, objects vs compiled) =="
     python benchmarks/bench_execute.py --tiers 10000
+    echo "== recovery smoke bench (10k drops, kill 1 of 8 nodes at 50%) =="
+    python benchmarks/bench_execute.py --tier recovery --tiers 10000
 fi

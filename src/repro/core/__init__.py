@@ -9,8 +9,11 @@ from .drop import (AppDrop, AppState, DataDrop, Drop, DropState, FilePayload,
                    MemoryPayload, NullPayload, Payload, PayloadError)
 from .engine import ExecutionReport, Pipeline
 from .events import Event, EventBus, RecordingListener
-from .exec_compiled import execute_frontier
+from .exec_compiled import ExecHooks, execute_frontier
 from .fault import FaultManager, StragglerWatcher, elastic_remap, with_retries
+from .resilience import (CompiledFaultManager, FailureScript,
+                         ResilienceConfig, ResilienceStats, ResilientRunner,
+                         RetryPolicy, StragglerPolicy, execute_resilient)
 from .graph_io import iter_pgt, load_lgt, load_pgt, save_lgt, save_pgt
 from .lifecycle import DataLifecycleManager
 from .logical import (GraphValidationError, LogicalGraph,
@@ -27,19 +30,22 @@ from .unroll import (Axis, DropSpec, PhysicalGraphTemplate, compile_unroll,
                      leaf_axes, unroll, unroll_dict)
 
 __all__ = [
-    "AppDrop", "AppState", "Axis", "CompiledDropRef", "CompiledPGT",
-    "CompiledSession", "Construct", "DataDrop",
+    "AppDrop", "AppState", "Axis", "CompiledDropRef", "CompiledFaultManager",
+    "CompiledPGT", "CompiledSession", "Construct", "DataDrop",
     "DataIslandDropManager", "DataLifecycleManager", "Drop", "DropSpec",
-    "DropState", "DropView", "Event", "EventBus", "ExecutionReport",
-    "FaultManager", "FilePayload", "GraphValidationError", "Kind",
-    "LogicalEdge", "LogicalGraph", "LogicalGraphTemplate",
-    "MasterDropManager", "MemoryPayload", "NodeDropManager", "NodeInfo",
-    "NullPayload", "PartitionResult", "Payload", "PayloadError",
-    "PhysicalGraphTemplate", "Pipeline", "RecordingListener", "Session",
-    "SessionState", "StragglerWatcher", "compile_unroll", "critical_path",
-    "elastic_remap", "execute_frontier", "get_app", "iter_pgt",
-    "leaf_axes", "load_lgt", "load_pgt", "make_cluster", "map_partitions",
-    "min_res", "min_time", "partition_stats", "register_app", "save_lgt",
-    "save_pgt", "simulate_makespan", "stamp_nodes", "unroll",
-    "unroll_dict", "with_retries",
+    "DropState", "DropView", "Event", "EventBus", "ExecHooks",
+    "ExecutionReport", "FailureScript", "FaultManager", "FilePayload",
+    "GraphValidationError", "Kind", "LogicalEdge", "LogicalGraph",
+    "LogicalGraphTemplate", "MasterDropManager", "MemoryPayload",
+    "NodeDropManager", "NodeInfo", "NullPayload", "PartitionResult",
+    "Payload", "PayloadError", "PhysicalGraphTemplate", "Pipeline",
+    "RecordingListener", "ResilienceConfig", "ResilienceStats",
+    "ResilientRunner", "RetryPolicy", "Session", "SessionState",
+    "StragglerPolicy", "StragglerWatcher", "compile_unroll",
+    "critical_path", "elastic_remap", "execute_frontier",
+    "execute_resilient", "get_app", "iter_pgt", "leaf_axes", "load_lgt",
+    "load_pgt", "make_cluster", "map_partitions", "min_res", "min_time",
+    "partition_stats", "register_app", "save_lgt", "save_pgt",
+    "simulate_makespan", "stamp_nodes", "unroll", "unroll_dict",
+    "with_retries",
 ]

@@ -23,6 +23,8 @@ from .logical import LogicalGraph, LogicalGraphTemplate
 from .managers import MasterDropManager, make_cluster
 from .mapping import NodeInfo, map_partitions
 from .pgt import CompiledPGT
+from .resilience import (CompiledFaultManager, ResilienceConfig,
+                         execute_resilient)
 from .session import CompiledSession, Session, SessionState
 from .unroll import PhysicalGraphTemplate, unroll
 
@@ -36,6 +38,9 @@ class ExecutionReport:
     events_published: int
     errors: List[str] = field(default_factory=list)
     speculative_wins: int = 0
+    recoveries: int = 0            # node-failure recovery passes
+    recovered_drops: int = 0       # drops reset + remapped across passes
+    retries: int = 0               # dispatch-layer re-attempts
 
     @property
     def ok(self) -> bool:
@@ -67,13 +72,19 @@ class Pipeline:
                  deadline: Optional[float] = None,
                  enable_dlm: bool = False,
                  enable_stragglers: bool = False,
-                 execution: str = "objects") -> None:
+                 execution: str = "objects",
+                 resilience: Optional[ResilienceConfig] = None) -> None:
         if execution not in ("objects", "compiled"):
             raise ValueError(f"unknown execution mode {execution!r}")
         if execution == "compiled" and (enable_dlm or enable_stragglers):
             raise ValueError(
                 "compiled execution has no per-drop objects; DLM and "
                 "straggler services need execution='objects'")
+        if resilience is not None and execution != "compiled":
+            raise ValueError(
+                "resilience= is the compiled-path subsystem "
+                "(core.resilience); the object path uses "
+                "enable_stragglers / FaultManager (core.fault)")
         self.master, self.nodes = make_cluster(
             num_nodes, num_islands, workers_per_node)
         self.dop = dop
@@ -82,9 +93,11 @@ class Pipeline:
         self.enable_dlm = enable_dlm
         self.enable_stragglers = enable_stragglers
         self.execution = execution
+        self.resilience = resilience
         self.pgt: Optional[PhysicalGraphTemplate] = None
         self.session: Optional[Session] = None
-        self.fault_manager: Optional[FaultManager] = None
+        # FaultManager (objects) or CompiledFaultManager (compiled)
+        self.fault_manager: Any = None
         self.translate_time = 0.0
         self.deploy_time = 0.0
 
@@ -130,7 +143,7 @@ class Pipeline:
             session = CompiledSession(
                 session_id or f"s-{uuid.uuid4().hex[:8]}", pgt)
             self.master.deploy_compiled(session, pgt)
-            self.fault_manager = None   # needs drop objects
+            self.fault_manager = CompiledFaultManager(session, self.master)
         else:
             map_partitions(pgt, self.nodes)
             session = self.master.create_session(
@@ -186,7 +199,13 @@ class Pipeline:
             for uid, value in inputs.items():
                 session.write(uid, value)
         t0 = time.monotonic()
-        finished = execute_frontier(session, timeout=timeout)
+        if self.resilience is not None:
+            finished, stats = execute_resilient(
+                session, self.master, self.resilience, timeout=timeout,
+                fault_manager=self.fault_manager)
+        else:
+            finished = execute_frontier(session, timeout=timeout)
+            stats = None
         wall = time.monotonic() - t0
         errs = [f"{r.uid}: {(r.error_info or '')[:200]}"
                 for r in session.errors()]
@@ -197,6 +216,10 @@ class Pipeline:
             wall_time=wall,
             events_published=session.bus.published,
             errors=errs,
+            speculative_wins=stats.speculative_wins if stats else 0,
+            recoveries=stats.recoveries if stats else 0,
+            recovered_drops=stats.recovered_drops if stats else 0,
+            retries=stats.retries if stats else 0,
         )
 
     # -- convenience: run everything -----------------------------------------------

@@ -44,7 +44,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from .managers import _APP_REGISTRY, BUILTIN_FAST_APPS, get_app
-from .pgt import KIND_DATA, CompiledPGT
+from .pgt import (KIND_DATA, CompiledPGT, csr_gather,
+                  csr_gather_with_counts)
 from .session import (PK_FILE, PK_NULL, ST_COMPLETED, ST_ERROR, ST_INIT,
                       CompiledDropRef, CompiledSession)
 
@@ -81,23 +82,30 @@ class _WaveTimeout(Exception):
     terminal, some still INIT) resumes exactly where it stopped."""
 
 
-def _gather_with_counts(indptr: np.ndarray, cols: np.ndarray,
-                        ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Concatenated CSR rows for ``ids`` + per-id row lengths (grouped
-    arange — the same trick ``_kahn_levels`` uses)."""
-    starts = indptr[ids]
-    cnt = indptr[ids + 1] - starts
-    total = int(cnt.sum())
-    if total == 0:
-        return np.empty(0, dtype=cols.dtype), cnt
-    reps = np.repeat(starts - np.concatenate(([0], np.cumsum(cnt)[:-1])),
-                     cnt)
-    return cols[np.arange(total, dtype=np.int64) + reps], cnt
+class ExecHooks:
+    """Scheduler extension points (consumed by :mod:`repro.core.resilience`).
+
+    * ``on_wave(session, completed, total)`` — called at the top of every
+      wave, when all drop state is consistent (everything terminal or
+      INIT, no in-flight work).  May raise to abort the run; the state
+      array stays resumable.
+    * ``python_runner(ctx, ids)`` — replaces the sequential registry-app
+      loop for the wave's Python apps (``ctx`` is the ``_Dispatch``;
+      ``ids`` are node-sorted and may span nodes).  Must leave every id
+      terminal, or raise ``_WaveTimeout`` past ``ctx.deadline``.
+    """
+
+    __slots__ = ("on_wave", "python_runner")
+
+    def __init__(self, on_wave=None, python_runner=None) -> None:
+        self.on_wave = on_wave
+        self.python_runner = python_runner
 
 
-def _gather(indptr: np.ndarray, cols: np.ndarray,
-            ids: np.ndarray) -> np.ndarray:
-    return _gather_with_counts(indptr, cols, ids)[0]
+# shared with pgt.py (kept as module aliases — the scheduler's hot loop
+# and the resilience closure gather CSR rows the same way)
+_gather = csr_gather
+_gather_with_counts = csr_gather_with_counts
 
 
 # ---------------------------------------------------------------------------
@@ -157,10 +165,12 @@ def _drop_meta(pgt: CompiledPGT, idx: int) -> Dict[str, Any]:
 class _Dispatch:
     """Precomputed dispatch tables + the per-wave app execution logic."""
 
-    def __init__(self, session: CompiledSession) -> None:
+    def __init__(self, session: CompiledSession,
+                 hooks: Optional[ExecHooks] = None) -> None:
         pgt = session.pgt
         self.s = session
         self.pgt = pgt
+        self.hooks = hooks
         n = pgt.num_drops
         self.out_indptr, self.out_cols, _ = pgt.out_csr_with_eid()
         self.in_indptr, self.in_cols, _ = pgt.in_csr_with_eid()
@@ -191,7 +201,9 @@ class _Dispatch:
         Sleep apps are handled wave-wide first (the whole wave runs
         concurrently in the object engine, so one ``max(seconds)`` sleep
         models it — NOT one per node); everything else goes out as one
-        batched dispatch per node."""
+        batched dispatch per node.  Registry (Python) apps of the whole
+        wave are dispatched together, node-sorted, so a resilience runner
+        can overlap per-node batches and speculate across nodes."""
         if run_ids.size == 0:
             return
         codes = self.app_code[run_ids]
@@ -205,10 +217,13 @@ class _Dispatch:
         order = np.lexsort((run_ids, nodes))
         run = run_ids[order]
         bounds = np.flatnonzero(np.diff(nodes[order])) + 1
-        for batch in np.split(run, bounds):
-            self._dispatch_batch(batch)
+        python_parts = [self._dispatch_batch(batch)
+                        for batch in np.split(run, bounds)]
+        self._run_python_batch(np.concatenate(python_parts))
 
-    def _dispatch_batch(self, batch: np.ndarray) -> None:
+    def _dispatch_batch(self, batch: np.ndarray) -> np.ndarray:
+        """Run the fast-path apps of one per-node batch; return the
+        registry (Python) apps for the wave-wide dispatch."""
         codes = self.app_code[batch]
         none_ids = batch[codes == CODE_NONE]
         if none_ids.size:
@@ -219,11 +234,18 @@ class _Dispatch:
         ident_ids = batch[codes == CODE_IDENTITY]
         if ident_ids.size:
             self._identity_batch(ident_ids)
-        self._run_python_batch(batch[codes == CODE_PYTHON])
+        return batch[codes == CODE_PYTHON]
 
     def _run_python_batch(self, ids: np.ndarray) -> None:
         """Registry-path loop, deadline-checked per app (a wide wave of
-        Python apps must not overshoot the execution timeout)."""
+        Python apps must not overshoot the execution timeout).
+
+        A resilience ``python_runner`` hook takes over the whole per-node
+        batch (threaded dispatch, retries, straggler speculation)."""
+        if ids.size and self.hooks is not None \
+                and self.hooks.python_runner is not None:
+            self.hooks.python_runner(self, ids)
+            return
         for i in ids.tolist():
             if time.monotonic() > self.deadline:
                 raise _WaveTimeout
@@ -298,24 +320,34 @@ class _Dispatch:
         s.drop_state[fast_ids] = ST_COMPLETED
 
     # -- general path: the app registry -------------------------------------
-    def _run_python(self, i: int) -> None:
+    def app_call(self, i: int, out_ref=_DataRef):
+        """(func, in_refs, out_refs, app_ref) for registry app ``i``.
+
+        ``func`` is None for no-app drops (complete without work).  The
+        resilience runner passes a staging ``out_ref`` so speculative
+        duplicates buffer writes instead of touching the payload table."""
         s = self.s
         pgt = self.pgt
+        name = pgt.app_of(i)
+        func = get_app(name) if name else None
+        if func is None:
+            return None, [], [], None
+        ins = self.in_cols[self.in_indptr[i]:self.in_indptr[i + 1]]
+        ok = ins[s.drop_state[ins] == ST_COMPLETED]
+        refs = [_DataRef(s, int(j)) for j in ok]
+        # deterministic input order (the object engine sorts by
+        # (oid, uid) regardless of wiring order)
+        refs.sort(key=lambda r: (pgt.oid_of(r.idx), pgt.uid_of(r.idx)))
+        outs = [out_ref(s, int(j)) for j in
+                self.out_cols[self.out_indptr[i]:self.out_indptr[i + 1]]]
+        return func, refs, outs, _AppRef(s, int(i))
+
+    def _run_python(self, i: int) -> None:
+        s = self.s
         try:
-            name = pgt.app_of(i)
-            func = get_app(name) if name else None
+            func, refs, outs, app = self.app_call(i)
             if func is not None:
-                ins = self.in_cols[self.in_indptr[i]:self.in_indptr[i + 1]]
-                ok = ins[s.drop_state[ins] == ST_COMPLETED]
-                refs = [_DataRef(s, int(j)) for j in ok]
-                # deterministic input order (the object engine sorts by
-                # (oid, uid) regardless of wiring order)
-                refs.sort(key=lambda r: (pgt.oid_of(r.idx),
-                                         pgt.uid_of(r.idx)))
-                outs = [_DataRef(s, int(j)) for j in
-                        self.out_cols[self.out_indptr[i]:
-                                      self.out_indptr[i + 1]]]
-                func(refs, outs, _AppRef(s, int(i)))
+                func(refs, outs, app)
             s.drop_state[i] = ST_COMPLETED
         except Exception:  # noqa: BLE001 - app failures become drop ERRORs
             s.drop_state[i] = ST_ERROR
@@ -328,13 +360,16 @@ class _Dispatch:
 
 
 def execute_frontier(session: CompiledSession,
-                     timeout: float = 60.0) -> bool:
+                     timeout: float = 60.0,
+                     hooks: Optional[ExecHooks] = None) -> bool:
     """Run a deployed :class:`CompiledSession` to completion, wave-by-wave.
 
     Resume-aware: ``pending_inputs`` and the errored-predecessor counters
     are derived from the *current* state array, so a session restored from
     a checkpoint (or pre-seeded with completed drops) continues from
-    exactly where it left off.
+    exactly where it left off.  The same property makes ``hooks.on_wave``
+    free to abort the run (fault injection) — recovery resets state rows
+    and simply calls ``execute_frontier`` again.
 
     Returns True when every drop reached a terminal state within
     ``timeout``; on timeout the session is left RUNNING and False is
@@ -349,7 +384,7 @@ def execute_frontier(session: CompiledSession,
     state = session.drop_state
     kind = pgt.kind_arr
     in_deg = pgt.in_degrees()
-    ctx = _Dispatch(session)
+    ctx = _Dispatch(session, hooks)
     out_indptr, out_cols = ctx.out_indptr, ctx.out_cols
 
     # readiness counters, derived from current state (fresh start or resume)
@@ -373,6 +408,10 @@ def execute_frontier(session: CompiledSession,
     while frontier.size:
         if time.monotonic() > deadline:
             return False
+        if hooks is not None and hooks.on_wave is not None:
+            # state is consistent here (all drops terminal or INIT); any
+            # exception raised by the hook leaves the session resumable
+            hooks.on_wave(session, n - remaining, n)
 
         # 1. complete all ready data drops of the wave (vectorised)
         data_ids = frontier[kind[frontier] == KIND_DATA]

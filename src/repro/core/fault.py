@@ -43,7 +43,9 @@ def with_retries(fn: Callable, max_attempts: int = 3,
             except Exception as exc:  # noqa: BLE001
                 last = exc
                 app.meta["retries"] = attempt + 1
-                if backoff:
+                if backoff and attempt + 1 < max_attempts:
+                    # back off only between attempts — sleeping after the
+                    # final failure just delays the re-raise
                     time.sleep(backoff * (2 ** attempt))
         raise last  # type: ignore[misc]
 
@@ -72,6 +74,7 @@ class StragglerWatcher:
         self.speculated: Set[str] = set()
         self.wins = 0
         self._stop = threading.Event()
+        self._rr = 0                      # round-robin tie-break cursor
         self._started: Dict[str, float] = {}
         self._thread = threading.Thread(target=self._run, daemon=True)
         session.bus.subscribe_all(self._on_event)
@@ -111,10 +114,12 @@ class StragglerWatcher:
                     self._speculate(d)
 
     def _speculate(self, app: AppDrop) -> None:
-        """Run a duplicate on another node's executor."""
+        """Run a duplicate on the least-loaded other live node (round-robin
+        among ties — always picking ``nms[0]`` piled every duplicate onto
+        one node and made *it* the next straggler)."""
         nms = [nm for nm in self.master.node_managers().values()
                if nm.info.alive and nm.name != app.node]
-        target = nms[0] if nms else None
+        target = self._pick_target(nms)
 
         def dup() -> None:
             try:
@@ -132,6 +137,23 @@ class StragglerWatcher:
             target.executor.submit(dup)
         else:
             threading.Thread(target=dup, daemon=True).start()
+
+    def _pick_target(self, nms: List[NodeDropManager]
+                     ) -> Optional[NodeDropManager]:
+        """Least-loaded candidate (RUNNING apps placed on it), rotating
+        through ties so duplicates spread across equally-idle nodes."""
+        if not nms:
+            return None
+        loads: Dict[str, int] = {}
+        for d in self.session.drops.values():
+            if (isinstance(d, AppDrop)
+                    and d.exec_state is AppState.RUNNING and d.node):
+                loads[d.node] = loads.get(d.node, 0) + 1
+        low = min(loads.get(nm.name, 0) for nm in nms)
+        tied = [nm for nm in nms if loads.get(nm.name, 0) == low]
+        pick = tied[self._rr % len(tied)]
+        self._rr += 1
+        return pick
 
 
 # ---------------------------------------------------------------------------

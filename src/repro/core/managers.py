@@ -179,12 +179,10 @@ class NodeDropManager:
 
     # -- failure simulation -----------------------------------------------------
     def fail(self) -> None:
-        """Simulate node death: everything non-terminal on it is lost."""
-        if self.compiled_sessions:
-            raise NotImplementedError(
-                "node-failure recovery for compiled sessions is not "
-                "implemented (no per-drop objects to migrate); use "
-                "execution='objects' for fault-injection scenarios")
+        """Simulate node death: everything non-terminal on it is lost
+        (plus volatile COMPLETED memory payloads — memory dies with the
+        node).  Object sessions recover via ``fault.FaultManager``;
+        compiled sessions via ``resilience.CompiledFaultManager``."""
         self.info.alive = False
 
     def shutdown(self) -> None:
@@ -323,16 +321,10 @@ class MasterDropManager:
             raise ValueError(
                 f"drop {pgt.uid_of(first)} not mapped to a node; "
                 "run mapping.map_partitions first")
-        order = np.argsort(node_ids, kind="stable").astype(np.int64)
-        sorted_ids = node_ids[order]
-        uniq, starts = np.unique(sorted_ids, return_index=True)
-        bounds = np.append(starts, node_ids.size)
         by_island: Dict[str, Dict[str, np.ndarray]] = {}
-        for k, nid in enumerate(uniq.tolist()):
-            name = pgt.node_names[nid]
+        for name, indices in _node_slices(pgt).items():
             im = self._island_of(name)
-            by_island.setdefault(im.name, {})[name] = \
-                order[bounds[k]:bounds[k + 1]]
+            by_island.setdefault(im.name, {})[name] = indices
         for iname, by_node in by_island.items():
             self.islands[iname].deploy_compiled(session, pgt, by_node)
         if pgt.num_edges:
@@ -340,15 +332,74 @@ class MasterDropManager:
                 (node_ids[pgt.edge_src] != node_ids[pgt.edge_dst]).sum())
         self._sessions[session.session_id] = session  # type: ignore[assignment]
 
+    def refresh_compiled_slices(
+            self, session: CompiledSession, pgt: CompiledPGT,
+            moved_by_node: Optional[Dict[str, np.ndarray]] = None) -> None:
+        """Re-register per-node drop-id slices after ``node_ids`` changed
+        (the batched analogue of re-deploying migrated drops onto their
+        new Node Managers).
+
+        With ``moved_by_node`` (new node -> migrated drop ids, from fault
+        recovery) the update is incremental — O(moved + slices touched)
+        instead of re-argsorting the whole graph; without it, slices are
+        rebuilt from scratch."""
+        nms = self.node_managers()
+        if moved_by_node is None or not session.node_slices:
+            sid = session.session_id
+            for nm in nms.values():
+                nm.compiled_sessions.pop(sid, None)
+            session.node_slices.clear()
+            for name, indices in _node_slices(pgt).items():
+                self._island_of(name)   # placement must still be managed
+                nms[name].register_compiled(session, indices)
+            return
+        gained = dict(moved_by_node)
+        for node, old in list(session.node_slices.items()):
+            add = gained.pop(node, None)
+            if nms[node].info.alive:
+                # live slices only ever gain (drops migrate OFF dead nodes)
+                if add is not None:
+                    nms[node].register_compiled(
+                        session, np.concatenate([old, add]))
+                continue
+            # dead node: keep only the drops still placed there (terminal
+            # survivors); everything migrated points elsewhere now
+            keep = old[pgt.node_ids[old] == pgt.node_id_for(node)]
+            new = keep if add is None else np.concatenate([keep, add])
+            nms[node].register_compiled(session, new)
+        for node, add in gained.items():   # nodes with no prior slice
+            self._island_of(node)
+            nms[node].register_compiled(session, add)
+
     def node_managers(self) -> Dict[str, NodeDropManager]:
         out: Dict[str, NodeDropManager] = {}
         for im in self.islands.values():
             out.update(im.node_managers)
         return out
 
+    def live_node_managers(self) -> Dict[str, NodeDropManager]:
+        """Node managers still alive (the migration-target view)."""
+        return {n: nm for n, nm in self.node_managers().items()
+                if nm.info.alive}
+
+    def dead_nodes(self) -> List[str]:
+        return [n for n, nm in self.node_managers().items()
+                if not nm.info.alive]
+
     def shutdown(self) -> None:
         for nm in self.node_managers().values():
             nm.shutdown()
+
+
+def _node_slices(pgt: CompiledPGT) -> Dict[str, np.ndarray]:
+    """Per-node drop-id index slices from ``node_ids`` — one stable
+    argsort, shared by ``deploy_compiled`` and slice re-registration."""
+    node_ids = pgt.node_ids
+    order = np.argsort(node_ids, kind="stable").astype(np.int64)
+    uniq, starts = np.unique(node_ids[order], return_index=True)
+    bounds = np.append(starts, node_ids.size)
+    return {pgt.node_names[nid]: order[bounds[k]:bounds[k + 1]]
+            for k, nid in enumerate(uniq.tolist())}
 
 
 def _wire(session: Session, src: str, dst: str, streaming: bool) -> None:

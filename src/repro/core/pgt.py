@@ -40,6 +40,33 @@ def _uid_str(name: str, idx: Tuple[int, ...]) -> str:
     return name if not idx else f"{name}#{'.'.join(map(str, idx))}"
 
 
+def csr_gather_with_counts(indptr: np.ndarray, cols: np.ndarray,
+                           ids: np.ndarray) -> Tuple[np.ndarray,
+                                                     np.ndarray]:
+    """Concatenated CSR rows for ``ids`` + per-id row lengths.
+
+    The grouped-arange trick ``_kahn_levels`` uses, shared by the frontier
+    scheduler (successor advance) and the resilience subsystem (upstream
+    lineage closure over the reverse CSR)."""
+    starts = indptr[ids]
+    cnt = indptr[ids + 1] - starts
+    total = int(cnt.sum())
+    if total == 0:
+        return np.empty(0, dtype=cols.dtype), cnt
+    if total == ids.shape[0] and bool((cnt == 1).all()):
+        # every row has exactly one entry (the dominant case for
+        # in-adjacency): plain gather, no repeat/arange construction
+        return cols[starts], cnt
+    reps = np.repeat(starts - np.concatenate(([0], np.cumsum(cnt)[:-1])),
+                     cnt)
+    return cols[np.arange(total, dtype=np.int64) + reps], cnt
+
+
+def csr_gather(indptr: np.ndarray, cols: np.ndarray,
+               ids: np.ndarray) -> np.ndarray:
+    return csr_gather_with_counts(indptr, cols, ids)[0]
+
+
 def coo_to_csr(n: int, keys: np.ndarray,
                cols: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
                                           np.ndarray]:

@@ -312,6 +312,12 @@ class CompiledSession:
         self.error_info: Dict[int, str] = {}
         self.node_slices: Dict[str, np.ndarray] = {}
         self.cross_node_edges = 0          # stat recorded at deploy
+        # resilience counters (maintained by core.resilience; always
+        # present so monitoring code can read them unconditionally)
+        self.recoveries = 0                # node-failure recovery passes
+        self.recovered_drops = 0           # drops reset + remapped, total
+        self.speculative_wins = 0          # straggler duplicates that won
+        self.retries = 0                   # dispatch-layer re-attempts
         self._finished = threading.Event()
         self.created_at = time.monotonic()
         # payload-kind code per drop (PK_*; apps carry PK_MEMORY, unused)
@@ -335,6 +341,14 @@ class CompiledSession:
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         return self._finished.wait(timeout)
+
+    def reopen(self) -> None:
+        """Back to RUNNING after state rows were reset (fault recovery) —
+        the array-native mirror of :meth:`Session.reopen`.  The frontier
+        scheduler re-derives its readiness counters from the state array,
+        so execution resumes mid-wave with ``execute_frontier``."""
+        self.state = SessionState.RUNNING
+        self._finished.clear()
 
     def cancel(self) -> None:
         self.drop_state[self.drop_state == ST_INIT] = ST_CANCELLED
