@@ -4,16 +4,21 @@ The paper's headline regime is data-activated execution scaling to tens of
 millions of concurrent tasks; the object engine (one Python ``Drop`` +
 thread-pool future + event chain per drop) caps executable graphs around
 10^4 drops.  This benchmark measures both deploy+execute substrates on the
-same translated ``CompiledPGT`` at 1k/10k/100k-drop tiers:
+same translated ``CompiledPGT`` at 1k/10k/100k-drop tiers (the compiled
+path also opens a million-drop tier: ``--tiers 1000000`` runs translate +
+deploy + execute end-to-end; the object engine is skipped past
+``--max-object-drops``, default 100k):
 
 * **objects**  — per-drop instantiation + event-propagated cascade,
 * **compiled** — batched index-slice deploy + the frontier scheduler
   (``repro.core.exec_compiled``), no per-drop Python objects.
 
-Reported per tier: wall seconds (deploy+execute), drops/s, the paper's
-Fig. 8 metric (execution overhead per drop), and compiled-over-objects
-speedup.  Results also land as JSON in ``results/bench_execute.json``
-(alongside the existing dryrun results) for CI trending.
+Reported per tier: per-stage walls (translate / deploy with its
+map_partitions share / execute, plus which stage is largest), drops/s
+over deploy+execute, the paper's Fig. 8 metric (execution overhead per
+drop), and compiled-over-objects speedup.  Results also land as JSON in
+``results/bench_execute.json`` (alongside the existing dryrun results)
+for CI trending and the ``scripts/check_bench.py`` regression gate.
 
 The ``recovery`` tier measures the resilience subsystem
 (``core.resilience``): kill 1 of N nodes at 50% completion mid-run and
@@ -51,9 +56,9 @@ RESULTS_PATH = Path(__file__).resolve().parents[1] / "results" / \
 
 
 def make_lg(width: int, weighted: bool = False):
-    # weighted: nonzero cost-model weights so the mapper spreads drops
-    # over all nodes (zero-weight ties collapse onto node0 — fine for
-    # throughput, useless for killing a node)
+    # weighted: nonzero cost-model weights so the recovery tier's balance
+    # assertion exercises weight-based (not just count-based) spreading
+    # and the victim node is guaranteed real work to lose
     t, v = (1.0, 1.0) if weighted else (0.0, 0.0)
     g = GraphBuilder(f"ex{width}")
     g.data("src", volume=v)
@@ -82,13 +87,20 @@ def run_tier(target_drops: int, execution: str,
         wall = time.monotonic() - t0
         assert rep.ok, (rep.state, rep.errors[:3])
         n = sum(rep.status_counts.values())
+    # per-stage walls: translate / deploy (mapping included) / execute —
+    # the 1M-tier acceptance bar is deploy no longer the largest stage
+    stages = {"translate": p.translate_time, "deploy": p.deploy_time,
+              "execute": rep.wall_time}
     return {
         "tier": target_drops,
         "mode": execution,
         "drops": n,
+        "translate_s": round(p.translate_time, 4),
+        "map_s": round(p.map_time, 4),
         "deploy_s": round(p.deploy_time, 4),
         "execute_s": round(rep.wall_time, 4),
         "wall_s": round(wall, 4),
+        "largest_stage": max(stages, key=stages.get),  # type: ignore[arg-type]
         "drops_per_s": round(n / wall, 1),
         "overhead_us_per_drop": round(rep.overhead_per_drop_us(), 3),
     }
@@ -103,27 +115,30 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
     ``repeats`` runs (single-shot ms-scale walls are noise-dominated on
     shared machines).
 
-    Placement is stamped round-robin (each node holds ~1/N of the graph)
-    — this benchmarks the recovery path, not the partition mapper, and
-    the mapper's coarsening can skew drop counts badly on uniform
-    graphs."""
+    Placement comes straight from ``map_partitions`` — the multilevel
+    mapper spreads uniform graphs ~1/N per node (the round-robin
+    placement workaround this tier used to carry is gone), and each run
+    asserts the produced placement is within 2x of balanced."""
     width = max(target_drops // DROPS_PER_WIDTH, 1)
 
-    def deploy_round_robin(p: Pipeline) -> None:
+    def deploy_mapped(p: Pipeline) -> None:
         p.translate(make_lg(width, weighted=True))
         p.deploy()
         pgt = p.pgt
-        ids = np.array([pgt.node_id_for(f"node{k}")
-                        for k in range(num_nodes)], dtype=np.int32)
-        pgt.node_ids[:] = ids[np.arange(len(pgt)) % num_nodes]
-        p.master.refresh_compiled_slices(p.session, pgt)
+        per_node = np.bincount(pgt.node_ids[pgt.node_ids >= 0],
+                               minlength=num_nodes)
+        limit = 2.0 * len(pgt) / num_nodes
+        assert per_node.max() <= limit, (
+            f"mapper placement badly unbalanced: max node holds "
+            f"{int(per_node.max())} of {len(pgt)} drops (> 2/N = "
+            f"{limit:.0f}): {per_node.tolist()}")
 
     clean_walls: List[float] = []
     n = 0
     for _ in range(repeats):
         with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
                       execution="compiled") as p:
-            deploy_round_robin(p)
+            deploy_mapped(p)
             rep = p.execute(timeout=timeout, inputs={"src": 1})
             assert rep.ok, (rep.state, rep.errors[:3])
             clean_walls.append(rep.wall_time)
@@ -136,7 +151,7 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
     for rep_i in range(repeats + 1):
         with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
                       execution="compiled") as p:
-            deploy_round_robin(p)
+            deploy_mapped(p)
             p.resilience = ResilienceConfig(
                 failures=[FailureScript(victim, at_fraction=at_fraction)])
             gc.collect()   # keep GC pauses out of the ms-scale recovery
@@ -164,8 +179,13 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
     }
 
 
+DEFAULT_MAX_OBJECT_DROPS = 100_000   # objects cost ~100us+/drop; 1M would
+#                                      take minutes and gigabytes
+
+
 def run(tiers=(1_000, 10_000, 100_000),
-        max_object_drops: Optional[int] = None) -> List[Dict[str, float]]:
+        max_object_drops: Optional[int] = DEFAULT_MAX_OBJECT_DROPS
+        ) -> List[Dict[str, float]]:
     rows: List[Dict[str, float]] = []
     for tier in tiers:
         compiled = run_tier(tier, "compiled")
@@ -188,7 +208,11 @@ def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
                   f"recovered={r['recovered_drops']};"
                   f"frac_of_execute={r['recovery_frac_of_execute']}")
             continue
-        extra = (f"deploy_s={r['deploy_s']};execute_s={r['execute_s']};"
+        extra = (f"translate_s={r.get('translate_s', '?')};"
+                 f"deploy_s={r['deploy_s']};"
+                 f"map_s={r.get('map_s', '?')};"
+                 f"execute_s={r['execute_s']};"
+                 f"largest_stage={r.get('largest_stage', '?')};"
                  f"overhead_us={r['overhead_us_per_drop']}")
         if "speedup_compiled" in r:
             extra += f";compiled_speedup={r['speedup_compiled']}x"
@@ -216,7 +240,8 @@ def main() -> None:
                     help="'recovery' = node-kill + lineage-recovery suite")
     ap.add_argument("--tiers", type=int, nargs="+", default=None,
                     help="target drop counts")
-    ap.add_argument("--max-object-drops", type=int, default=None,
+    ap.add_argument("--max-object-drops", type=int,
+                    default=DEFAULT_MAX_OBJECT_DROPS,
                     help="skip the object engine above this tier "
                          "(it needs ~100us+ per drop)")
     args = ap.parse_args()

@@ -19,7 +19,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 from typing import List, Tuple
 
 from repro.core import min_time, unroll, unroll_dict
@@ -28,6 +30,9 @@ from repro.dsl import GraphBuilder
 
 # drops per unit width in make_lg (src + width * (depth apps + depth data))
 DROPS_PER_WIDTH = 6
+
+RESULTS_PATH = Path(__file__).resolve().parents[1] / "results" / \
+    "bench_translate.json"
 
 # scaled-down merge-trial budget for the dict path at the 50k-width
 # comparison tier: the seed benchmark used max_trials=500 at width <= 2000;
@@ -169,6 +174,26 @@ def main() -> None:
         million_drops=args.drops)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
+    emit_json(rows)
+
+
+def emit_json(rows: List[Row]) -> None:
+    """Merge rows into ``results/bench_translate.json`` (keyed by metric
+    name, so a partial run — e.g. the CI smoke — keeps the other tiers'
+    trend rows; same contract as ``bench_execute.py``).  Consumed by the
+    ``scripts/check_bench.py`` regression gate."""
+    new = [{"metric": name, "value": round(val, 2), "extra": extra}
+           for name, val, extra in rows]
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    if RESULTS_PATH.exists():
+        with open(RESULTS_PATH) as fh:
+            old = json.load(fh).get("rows", [])
+        fresh = {r["metric"] for r in new}
+        new = [r for r in old if r.get("metric") not in fresh] + new
+    with open(RESULTS_PATH, "w") as fh:
+        json.dump({"benchmark": "bench_translate", "rows": new}, fh,
+                  indent=2)
+    print(f"# wrote {RESULTS_PATH}")
 
 
 if __name__ == "__main__":

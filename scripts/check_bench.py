@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""CI bench-regression gate.
+
+Compares fresh benchmark JSON (``results/bench_execute.json`` and
+``results/bench_translate.json``, written by the smoke benches in
+``scripts/ci.sh``) against the committed ``results/baseline.json`` and
+fails (exit 1) when any throughput metric regressed by more than the
+tolerance — the hard-won compiled-engine numbers must not silently rot.
+
+Metric keys:
+
+* ``execute:<mode>:<tier>:drops_per_s``  — from bench_execute rows,
+* ``translate:<metric name>``            — from bench_translate rows
+  (``drops_per_s`` metrics only; us-per-drop rows are latencies, not
+  throughputs, and are skipped).
+
+Rules:
+
+* a metric present in both current results and baseline must satisfy
+  ``current >= baseline * (1 - tolerance)``;
+* metrics missing on either side are reported but never fail the gate
+  (partial runs — e.g. the 10k CI smoke — are legitimate);
+* the comparison (every metric, its delta, and any failures) is written
+  to ``results/bench_regression.json`` so CI can upload it as an
+  artifact next to the raw results.
+
+The committed baseline is set *conservatively below* locally-measured
+throughput (CI runners are slower and noisier than dev machines); the
+30% default tolerance then catches real order-of-magnitude regressions
+— an accidental de-vectorisation, a quadratic loop — not machine jitter.
+
+Usage:
+  python scripts/check_bench.py                    # gate with defaults
+  python scripts/check_bench.py --tolerance 0.5
+  python scripts/check_bench.py --write-baseline   # refresh baseline
+                                                   # from current results
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS_DIR = ROOT / "results"
+BASELINE_PATH = RESULTS_DIR / "baseline.json"
+REPORT_PATH = RESULTS_DIR / "bench_regression.json"
+DEFAULT_TOLERANCE = 0.30
+
+
+def execute_metrics(path: Path) -> Dict[str, float]:
+    """``execute:<mode>:<tier>:drops_per_s`` from a bench_execute JSON."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for r in rows:
+        if "drops_per_s" in r:
+            out[f"execute:{r['mode']}:{r['tier']}:drops_per_s"] = \
+                float(r["drops_per_s"])
+    return out
+
+
+def translate_metrics(path: Path) -> Dict[str, float]:
+    """``translate:<metric>`` throughput rows from a bench_translate
+    JSON (higher-is-better ``drops_per_s`` metrics only)."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    return {f"translate:{r['metric']}": float(r["value"])
+            for r in rows if "drops_per_s" in r.get("metric", "")}
+
+
+def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
+    out = execute_metrics(results_dir / "bench_execute.json")
+    out.update(translate_metrics(results_dir / "bench_translate.json"))
+    return out
+
+
+def compare(current: Dict[str, float], baseline: Dict[str, float],
+            tolerance: float) -> Dict[str, object]:
+    """Gate ``current`` against ``baseline``; returns the full report."""
+    checked: List[Dict[str, object]] = []
+    failures: List[Dict[str, object]] = []
+    for key in sorted(baseline):
+        base = float(baseline[key])
+        cur = current.get(key)
+        if cur is None:
+            checked.append({"metric": key, "baseline": base,
+                            "current": None, "status": "missing"})
+            continue
+        floor = base * (1.0 - tolerance)
+        ratio = cur / base if base else float("inf")
+        row: Dict[str, object] = {
+            "metric": key, "baseline": base, "current": cur,
+            "ratio": round(ratio, 4),
+            "status": "ok" if cur >= floor else "regressed",
+        }
+        checked.append(row)
+        if cur < floor:
+            failures.append(row)
+    extra = sorted(set(current) - set(baseline))
+    return {"tolerance": tolerance, "checked": checked,
+            "failures": failures, "unbaselined": extra}
+
+
+def write_baseline(current: Dict[str, float],
+                   path: Path = BASELINE_PATH,
+                   headroom: float = 0.5) -> None:
+    """Refresh the committed baseline from current results, discounted by
+    ``headroom`` so slower CI machines don't trip the gate."""
+    metrics = {k: round(v * (1.0 - headroom), 1)
+               for k, v in sorted(current.items())}
+    with open(path, "w") as fh:
+        json.dump({
+            "comment": "bench-regression floors (scripts/check_bench.py);"
+                       " values are measured throughput discounted by"
+                       f" {headroom:.0%} machine headroom",
+            "metrics": metrics,
+        }, fh, indent=2)
+    print(f"# wrote {path} ({len(metrics)} metrics)")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=Path, default=BASELINE_PATH)
+    ap.add_argument("--results-dir", type=Path, default=RESULTS_DIR)
+    ap.add_argument("--report", type=Path, default=REPORT_PATH)
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional drop vs baseline "
+                         f"(default: baseline file's, else "
+                         f"{DEFAULT_TOLERANCE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current results "
+                         "instead of gating")
+    ap.add_argument("--headroom", type=float, default=0.5,
+                    help="fractional discount applied when writing the "
+                         "baseline (CI machines are slower than dev)")
+    args = ap.parse_args(argv)
+
+    current = collect_current(args.results_dir)
+    if args.write_baseline:
+        if not current:
+            print("check_bench: no current results to baseline from",
+                  file=sys.stderr)
+            return 2
+        write_baseline(current, args.baseline, headroom=args.headroom)
+        return 0
+
+    if not args.baseline.exists():
+        print(f"check_bench: no baseline at {args.baseline} — run "
+              f"--write-baseline after a bench pass", file=sys.stderr)
+        return 2
+    with open(args.baseline) as fh:
+        base_doc = json.load(fh)
+    tolerance = args.tolerance
+    if tolerance is None:
+        tolerance = float(base_doc.get("tolerance", DEFAULT_TOLERANCE))
+    report = compare(current, base_doc.get("metrics", {}), tolerance)
+
+    args.report.parent.mkdir(parents=True, exist_ok=True)
+    with open(args.report, "w") as fh:
+        json.dump(report, fh, indent=2)
+
+    for row in report["checked"]:                     # type: ignore[index]
+        cur = row["current"]
+        print(f"{row['status']:>9}  {row['metric']}: "
+              f"{'-' if cur is None else f'{cur:,.1f}'} "
+              f"(floor {float(row['baseline']) * (1 - tolerance):,.1f})")
+    failures = report["failures"]                     # type: ignore[index]
+    if failures:
+        print(f"check_bench: {len(failures)} metric(s) regressed more "
+              f"than {tolerance:.0%} vs {args.baseline} "
+              f"(report: {args.report})", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK ({len(report['checked'])} metrics, "  # type: ignore[arg-type]
+          f"tolerance {tolerance:.0%}; report: {args.report})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

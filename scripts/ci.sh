@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite + a translate-throughput smoke tier.
+# Tier-1 CI: full test suite + smoke benches + the bench-regression gate.
 #
-#   ./scripts/ci.sh            # tests + smoke bench
-#   SKIP_BENCH=1 ./scripts/ci.sh   # tests only
+#   ./scripts/ci.sh                 # tests + smoke benches + gate
+#   SKIP_BENCH=1 ./scripts/ci.sh    # tests only (CI "tier1" job)
+#   ONLY_BENCH=1 ./scripts/ci.sh    # benches + gate only (CI "bench" job)
 #
 # Dev deps (optional; the suite collects cleanly without hypothesis):
 #   pip install -r requirements-dev.txt
@@ -10,9 +11,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# reproducible property runs: the "ci" profile (tests/conftest.py) pins
+# hypothesis to derandomized examples, so red CI is re-runnable locally
+export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+if [[ -z "${ONLY_BENCH:-}" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
 
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     echo "== translate smoke bench (width 10000) =="
@@ -21,4 +27,6 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/bench_execute.py --tiers 10000
     echo "== recovery smoke bench (10k drops, kill 1 of 8 nodes at 50%) =="
     python benchmarks/bench_execute.py --tier recovery --tiers 10000
+    echo "== bench-regression gate (results vs results/baseline.json) =="
+    python scripts/check_bench.py
 fi

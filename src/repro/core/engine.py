@@ -100,6 +100,7 @@ class Pipeline:
         self.fault_manager: Any = None
         self.translate_time = 0.0
         self.deploy_time = 0.0
+        self.map_time = 0.0        # partition->node mapping share of deploy
 
     # -- stage 4: translate ---------------------------------------------------
     def translate(self, lg: LogicalGraph) -> PhysicalGraphTemplate:
@@ -139,13 +140,17 @@ class Pipeline:
                 pgt = CompiledPGT.from_dict_pgt(pgt)
                 if not supplied:
                     self.pgt = pgt
+            tm = time.monotonic()     # map share excludes the dict lift
             map_partitions(pgt, self.nodes)
+            self.map_time = time.monotonic() - tm
             session = CompiledSession(
                 session_id or f"s-{uuid.uuid4().hex[:8]}", pgt)
             self.master.deploy_compiled(session, pgt)
             self.fault_manager = CompiledFaultManager(session, self.master)
         else:
+            tm = time.monotonic()
             map_partitions(pgt, self.nodes)
+            self.map_time = time.monotonic() - tm
             session = self.master.create_session(
                 session_id or f"s-{uuid.uuid4().hex[:8]}")
             self.master.deploy(session, pgt)
@@ -204,7 +209,9 @@ class Pipeline:
                 session, self.master, self.resilience, timeout=timeout,
                 fault_manager=self.fault_manager)
         else:
-            finished = execute_frontier(session, timeout=timeout)
+            finished = execute_frontier(
+                session, timeout=timeout,
+                executors=self.master.node_executors())
             stats = None
         wall = time.monotonic() - t0
         errs = [f"{r.uid}: {(r.error_info or '')[:200]}"

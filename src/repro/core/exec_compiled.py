@@ -108,6 +108,18 @@ _gather = csr_gather
 _gather_with_counts = csr_gather_with_counts
 
 
+def node_batches(pgt: CompiledPGT, ids: np.ndarray) -> List[np.ndarray]:
+    """Split drop ids into per-placement-node batches (stable order).
+
+    Shared by the default threaded wave dispatch below and the
+    resilience runner's speculative dispatch (same argsort-and-split)."""
+    nodes = pgt.node_ids[ids]
+    order = np.argsort(nodes, kind="stable")
+    run = ids[order]
+    bounds = np.flatnonzero(np.diff(nodes[order])) + 1
+    return np.split(run, bounds)
+
+
 # ---------------------------------------------------------------------------
 # Registry-app shims — what an app function sees instead of real Drops
 # ---------------------------------------------------------------------------
@@ -166,11 +178,16 @@ class _Dispatch:
     """Precomputed dispatch tables + the per-wave app execution logic."""
 
     def __init__(self, session: CompiledSession,
-                 hooks: Optional[ExecHooks] = None) -> None:
+                 hooks: Optional[ExecHooks] = None,
+                 executors: Optional[Dict[str, Any]] = None) -> None:
         pgt = session.pgt
         self.s = session
         self.pgt = pgt
         self.hooks = hooks
+        # node name -> thread pool: Python-app waves spanning several
+        # nodes overlap (one worker task per node batch); None/empty
+        # keeps the sequential in-thread dispatch
+        self.executors = executors or {}
         n = pgt.num_drops
         self.out_indptr, self.out_cols, _ = pgt.out_csr_with_eid()
         self.in_indptr, self.in_cols, _ = pgt.in_csr_with_eid()
@@ -237,19 +254,66 @@ class _Dispatch:
         return batch[codes == CODE_PYTHON]
 
     def _run_python_batch(self, ids: np.ndarray) -> None:
-        """Registry-path loop, deadline-checked per app (a wide wave of
-        Python apps must not overshoot the execution timeout).
+        """Registry-path dispatch, deadline-checked per app (a wide wave
+        of Python apps must not overshoot the execution timeout).
 
         A resilience ``python_runner`` hook takes over the whole per-node
-        batch (threaded dispatch, retries, straggler speculation)."""
+        batch (threaded dispatch, retries, straggler speculation);
+        otherwise, with node executors available, per-node batches run
+        concurrently on the node thread pools — the object engine's wave
+        parallelism, which the plain sequential loop used to serialise."""
         if ids.size and self.hooks is not None \
                 and self.hooks.python_runner is not None:
             self.hooks.python_runner(self, ids)
             return
+        if self.executors and ids.size > 1:
+            self._run_python_threaded(ids)
+            return
+        self._run_python_seq(ids)
+
+    def _run_python_seq(self, ids: np.ndarray) -> None:
         for i in ids.tolist():
             if time.monotonic() > self.deadline:
                 raise _WaveTimeout
             self._run_python(i)
+
+    def _run_python_threaded(self, ids: np.ndarray) -> None:
+        """Overlap the wave's per-node batches on the node thread pools.
+
+        Every app still lands in a terminal state exactly as on the
+        sequential path (``_run_python`` catches app exceptions); batches
+        on nodes without an executor (or unplaced drops) run inline.  A
+        deadline overrun in any batch surfaces as one ``_WaveTimeout``
+        after all batches stopped — the state array stays resumable."""
+        batches = node_batches(self.pgt, ids)
+        if len(batches) <= 1:
+            self._run_python_seq(ids)
+            return
+        node_ids = self.pgt.node_ids
+        names = self.pgt.node_names
+        futures = []
+        inline: List[np.ndarray] = []
+        for batch in batches:
+            nid = int(node_ids[int(batch[0])])
+            ex = self.executors.get(names[nid]) if nid >= 0 else None
+            if ex is None:
+                inline.append(batch)
+            else:
+                futures.append(ex.submit(self._run_python_seq, batch))
+        timed_out = False
+        for batch in inline:
+            try:
+                self._run_python_seq(batch)
+            except _WaveTimeout:
+                timed_out = True     # keep draining; workers stop on the
+                #                      same deadline within one app each
+        for f in futures:
+            try:
+                f.result()
+            except _WaveTimeout:
+                timed_out = True
+        if timed_out:
+            raise _WaveTimeout
 
     # -- fast paths ---------------------------------------------------------
     def _write_none_outputs(self, ids: np.ndarray) -> None:
@@ -361,8 +425,14 @@ class _Dispatch:
 
 def execute_frontier(session: CompiledSession,
                      timeout: float = 60.0,
-                     hooks: Optional[ExecHooks] = None) -> bool:
+                     hooks: Optional[ExecHooks] = None,
+                     executors: Optional[Dict[str, Any]] = None) -> bool:
     """Run a deployed :class:`CompiledSession` to completion, wave-by-wave.
+
+    ``executors`` (node name -> thread pool, e.g.
+    ``MasterDropManager.node_executors()``) lets registry-app waves that
+    span several nodes overlap; without it Python apps run sequentially
+    in the calling thread.  Vectorised fast paths are unaffected.
 
     Resume-aware: ``pending_inputs`` and the errored-predecessor counters
     are derived from the *current* state array, so a session restored from
@@ -384,7 +454,7 @@ def execute_frontier(session: CompiledSession,
     state = session.drop_state
     kind = pgt.kind_arr
     in_deg = pgt.in_degrees()
-    ctx = _Dispatch(session, hooks)
+    ctx = _Dispatch(session, hooks, executors)
     out_indptr, out_cols = ctx.out_indptr, ctx.out_cols
 
     # readiness counters, derived from current state (fresh start or resume)

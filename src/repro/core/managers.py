@@ -382,6 +382,14 @@ class MasterDropManager:
         return {n: nm for n, nm in self.node_managers().items()
                 if nm.info.alive}
 
+    def node_executors(self) -> Dict[str, ThreadPoolExecutor]:
+        """Per-node thread pools of the live nodes — what the compiled
+        engine's threaded wave dispatch overlaps Python-app batches on
+        (``exec_compiled.execute_frontier(..., executors=...)``)."""
+        return {n: nm.executor
+                for n, nm in self.node_managers().items()
+                if nm.info.alive}
+
     def dead_nodes(self) -> List[str]:
         return [n for n, nm in self.node_managers().items()
                 if not nm.info.alive]

@@ -6,25 +6,47 @@ if p > m ... with the goal of balancing the overall workload (both compute
 time and memory usage) evenly.  The physical mapping from the m merged
 clusters to m compute nodes becomes a straightforward round-robin assignment."
 
-We implement the same multilevel scheme in pure python:
+Two implementations share the objective ``alpha * imbalance + beta * cut``:
 
-1. **Coarsen**: build the partition-level graph (vertex weight = total
-   execution time + memory; edge weight = cross-partition data volume) and
-   repeatedly contract heaviest-edge-matching pairs until <= m vertices.
-2. **Initial assignment**: round-robin of coarse vertices to nodes.
-3. **Refine** (Kernighan–Lin style): greedily move partitions between nodes
-   when it reduces ``alpha * imbalance + beta * cut_volume``.
+* ``mapping="csr"`` (default) — array-native multilevel scheme over the
+  partition graph held as flat CSR-style arrays
+  (:meth:`~repro.core.pgt.CompiledPGT.partition_graph_arrays`):
+
+  1. **Coarsen**: rounds of vectorized *heavy-edge matching* — every
+     vertex picks its heaviest incident edge (ties broken toward the
+     lighter partner), mutual picks contract, the coarse graph is
+     re-aggregated with ``np.unique``/``np.bincount`` — until <= m
+     super-vertices or the positive-weight edges run out.
+  2. **Assign**: longest-processing-time greedy of the coarse groups onto
+     nodes.  Loads carry a drop-count epsilon, so *zero-communication /
+     zero-weight* components (where every tie-break used to collapse the
+     whole graph onto node0) spread ~1/m per node by count.
+  3. **Refine**: vectorized Kernighan–Lin-style best-move greedy, driven
+     directly from the partition-graph edge arrays.
+
+* ``mapping="dict"`` — the original dict-of-dicts implementation, kept as
+  the semantic oracle (``tests/test_mapping_balance.py`` checks the CSR
+  mapper never produces a materially worse objective).
+
+Both paths accept either PGT representation; the CSR path extracts the
+partition graph vectorized from a ``CompiledPGT`` and via the dict walk
+otherwise (loop-carried graphs still unroll into dict PGTs).
 """
 from __future__ import annotations
 
 import heapq
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from .pgt import KIND_DATA, CompiledPGT
 from .unroll import PhysicalGraphTemplate
+
+# drop-count tie-break scale: small enough never to outweigh a real load
+# difference, large enough to order pure-count ties (see _effective_loads)
+_COUNT_EPS = 1e-9
 
 
 @dataclass
@@ -65,44 +87,297 @@ class PartitionGraph:
 
     @classmethod
     def _from_compiled(cls, pgt: CompiledPGT) -> "PartitionGraph":
-        """Vectorized partition-graph extraction (bincount-based).
-
-        Handles unassigned drops (partition == -1, or any negative id) the
-        same way the dict path does: the sentinel is just another partition
-        key (shifted internally for bincount, which rejects negatives).
-        """
+        """Dict view of the vectorized partition-graph extraction."""
         g = cls()
-        part, _, shift, span = pgt.partition_index()
-        if part.size == 0:
-            return g
-        ids, w = pgt.partition_loads(pgt.weight_arr)
-        _, mem = pgt.partition_loads(
-            np.where(pgt.kind_arr == KIND_DATA, pgt.vol_arr, 0.0))
-        for p, wv, mv in zip(ids.tolist(), w.tolist(), mem.tolist()):
+        ids, load, mem, _, eu, ev, ew = pgt.partition_graph_arrays()
+        for p, wv, mv in zip(ids.tolist(), load.tolist(), mem.tolist()):
             g.vweights[p] = float(wv)
             g.vmem[p] = float(mv)
-        ps, pd = part[pgt.edge_src], part[pgt.edge_dst]
-        cross = ps != pd
-        if cross.any():
-            vols = pgt.edge_volumes()[cross]
-            lo = np.minimum(ps[cross], pd[cross])
-            hi = np.maximum(ps[cross], pd[cross])
-            key = (lo + shift) * np.int64(span) + (hi + shift)
-            uniq, inv = np.unique(key, return_inverse=True)
-            sums = np.bincount(inv, weights=vols)
-            for k, v in zip(uniq.tolist(), sums.tolist()):
-                g.eweights[(int(k) // span - shift,
-                            int(k) % span - shift)] = float(v)
+        labels = ids.tolist()
+        for a, b, v in zip(eu.tolist(), ev.tolist(), ew.tolist()):
+            g.eweights[(labels[a], labels[b])] = float(v)
         return g
+
+
+class PartitionArrays:
+    """The partition-level graph as flat arrays — the CSR mapper's input.
+
+    * ``ids``   — occurring partition labels, sorted,
+    * ``load`` / ``mem`` / ``count`` — per-partition app weight, data
+      volume, drop count,
+    * ``eu`` / ``ev`` / ``ew`` — unique undirected cross-partition edges
+      (indices into ``ids``, ``eu < ev``) with summed volumes.
+    """
+
+    __slots__ = ("ids", "load", "mem", "count", "eu", "ev", "ew")
+
+    def __init__(self, ids, load, mem, count, eu, ev, ew) -> None:
+        self.ids = ids
+        self.load = load
+        self.mem = mem
+        self.count = count
+        self.eu = eu
+        self.ev = ev
+        self.ew = ew
+
+    @classmethod
+    def from_pgt(cls, pgt) -> "PartitionArrays":
+        if isinstance(pgt, CompiledPGT):
+            return cls(*pgt.partition_graph_arrays())
+        # dict PGTs (loop-carried graphs): one spec walk, then arrays
+        g = PartitionGraph.from_pgt(pgt)
+        counts: Counter = Counter(
+            s.partition for s in pgt.drops.values())
+        labels = sorted(g.vweights)
+        index = {p: i for i, p in enumerate(labels)}
+        npart = len(labels)
+        ids = np.asarray(labels, dtype=np.int64)
+        load = np.fromiter((g.vweights[p] for p in labels),
+                           dtype=np.float64, count=npart)
+        mem = np.fromiter((g.vmem[p] for p in labels),
+                          dtype=np.float64, count=npart)
+        count = np.fromiter((counts[p] for p in labels),
+                            dtype=np.int64, count=npart)
+        ne = len(g.eweights)
+        eu = np.fromiter((index[a] for a, _ in g.eweights),
+                         dtype=np.int64, count=ne)
+        ev = np.fromiter((index[b] for _, b in g.eweights),
+                         dtype=np.int64, count=ne)
+        ew = np.fromiter(g.eweights.values(), dtype=np.float64, count=ne)
+        return cls(ids, load, mem, count, eu, ev, ew)
+
+
+def _validate(nodes: Sequence[NodeInfo],
+              refine_iters: int) -> List[NodeInfo]:
+    """Shared argument validation (both mapper paths).
+
+    Duplicate node names used to silently collapse via dict keying (two
+    ``NodeInfo("n0")`` entries looked like one node with doubled
+    capacity); a negative ``refine_iters`` silently skipped refinement.
+    """
+    if refine_iters < 0:
+        raise ValueError(
+            f"refine_iters must be >= 0, got {refine_iters}")
+    counts = Counter(n.name for n in nodes)
+    dupes = sorted(name for name, c in counts.items() if c > 1)
+    if dupes:
+        raise ValueError(f"duplicate node names: {dupes}")
+    live = [n for n in nodes if n.alive]
+    if not live:
+        raise ValueError("no live nodes to map onto")
+    return live
 
 
 def map_partitions(pgt, nodes: Sequence[NodeInfo],
                    alpha: float = 1.0, beta: float = 1e-9,
-                   refine_iters: int = 200) -> Dict[int, str]:
-    """Assign each PGT partition to a node; also stamps ``spec.node``."""
-    live = [n for n in nodes if n.alive]
-    if not live:
-        raise ValueError("no live nodes to map onto")
+                   refine_iters: int = 200,
+                   mapping: str = "csr") -> Dict[int, str]:
+    """Assign each PGT partition to a node; also stamps ``spec.node``.
+
+    ``mapping="csr"`` (default) runs the array-native multilevel mapper;
+    ``mapping="dict"`` runs the original dict implementation (the
+    semantic oracle, fine to ~10^4 partitions).
+    """
+    live = _validate(nodes, refine_iters)
+    if mapping == "dict":
+        return _map_partitions_dict(pgt, live, alpha, beta, refine_iters)
+    if mapping != "csr":
+        raise ValueError(f"unknown mapping {mapping!r}")
+    m = len(live)
+    g = PartitionArrays.from_pgt(pgt)
+    npart = int(g.ids.size)
+    if npart == 0:
+        stamp_nodes(pgt, {})
+        return {}
+    lw = _effective_loads(g.load + 1e-6 * g.mem, g.count)
+    # 1. coarsen: vectorized heavy-edge matching until <= m super-vertices
+    group = _coarsen_hem(lw, g.eu, g.ev, g.ew, m)
+    ngroups = int(group.max()) + 1
+    gload = np.bincount(group, weights=lw, minlength=ngroups)
+    # 2. initial assignment: LPT greedy of coarse groups onto nodes
+    a = _lpt_assign(gload, m)[group]
+    # 3. KL-style refinement straight off the partition-graph edge arrays
+    _refine_arrays(lw, a, m, g.eu, g.ev, g.ew, alpha, beta, refine_iters)
+    assign = {int(p): live[int(j)].name
+              for p, j in zip(g.ids.tolist(), a.tolist())}
+    stamp_nodes(pgt, assign)
+    return assign
+
+
+def _effective_loads(load: np.ndarray, count: np.ndarray) -> np.ndarray:
+    """Load vector with a drop-count tie-break.
+
+    A uniform zero-weight graph has every partition load 0; every greedy
+    decision then ties and historically resolved to node0 — the whole
+    graph piled onto one node.  Adding a count term that is *tiny
+    relative to the mean positive load* (or the count itself when no
+    load exists) makes balance-by-count the tie-break without measurably
+    distorting weighted graphs.
+    """
+    total = float(load.sum())
+    if total <= 0.0:
+        return count.astype(np.float64)
+    eps = (total / max(float(count.sum()), 1.0)) * _COUNT_EPS
+    return load + eps * count
+
+
+def _coarsen_hem(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
+                 ew: np.ndarray, m: int) -> np.ndarray:
+    """Vectorized heavy-edge-matching coarsening.
+
+    Rounds of parallel matching: every vertex nominates the neighbour
+    across its heaviest positive edge (ties toward the lighter partner —
+    load-aware, so merged loads stay even), mutual nominations contract.
+    Merges per round are capped at ``nv - m`` (heaviest matched edges
+    first), so coarsening never overshoots below ``m`` vertices.  Each
+    round is O(E log E) numpy work; rounds are O(log P) in practice.
+
+    Merged loads are capped at the balanced per-node share
+    (``sum(lw)/m``): a pair whose combined load would exceed it does not
+    contract.  Without the cap a connected uniform graph coarsens into
+    one giant super-vertex that no amount of single-move refinement can
+    re-spread — the multilevel analogue of the node0 pile-up.
+
+    Returns the dense group label (0..G-1) of every input vertex.
+    Zero-weight edges never match — disconnected / zero-communication
+    components are left to the load-aware LPT assignment.
+    """
+    npart = lw.size
+    label = np.arange(npart, dtype=np.int64)
+    pos = ew > 0.0
+    ceu = eu[pos].astype(np.int64, copy=True)
+    cev = ev[pos].astype(np.int64, copy=True)
+    cew = ew[pos].astype(np.float64, copy=True)
+    cload = lw.astype(np.float64, copy=True)
+    cap = float(cload.sum()) / max(m, 1)
+    nv = npart
+    while nv > m and ceu.size:
+        src = np.concatenate([ceu, cev])
+        dst = np.concatenate([cev, ceu])
+        w = np.concatenate([cew, cew])
+        # per-vertex heaviest incident edge; equal weights prefer the
+        # lighter partner, then the smaller id (deterministic)
+        order = np.lexsort((-dst, -cload[dst], w, src))
+        s_srt = src[order]
+        last = np.flatnonzero(np.r_[s_srt[1:] != s_srt[:-1], True])
+        choice = np.full(nv, -1, dtype=np.int64)
+        bestw = np.zeros(nv, dtype=np.float64)
+        choice[s_srt[last]] = dst[order][last]
+        bestw[s_srt[last]] = w[order][last]
+        cand = np.flatnonzero(choice >= 0)
+        mutual = cand[choice[choice[cand]] == cand]
+        pu = mutual[mutual < choice[mutual]]
+        if pu.size:
+            pv = choice[pu]
+            fits = cload[pu] + cload[pv] <= cap     # balance constraint
+            pu, pv = pu[fits], pv[fits]
+        if pu.size == 0:
+            break
+        if pu.size > nv - m:      # don't coarsen below m vertices
+            keep = np.argsort(-bestw[pu], kind="stable")[:nv - m]
+            pu, pv = pu[keep], pv[keep]
+        merge_map = np.arange(nv, dtype=np.int64)
+        merge_map[pv] = pu        # matched pairs are disjoint
+        uniq, new_of = np.unique(merge_map, return_inverse=True)
+        label = new_of[label]
+        nv = int(uniq.size)
+        cload = np.bincount(new_of, weights=cload, minlength=nv)
+        ceu, cev = new_of[ceu], new_of[cev]
+        live_e = ceu != cev
+        if live_e.any():
+            lo = np.minimum(ceu[live_e], cev[live_e])
+            hi = np.maximum(ceu[live_e], cev[live_e])
+            key = lo * np.int64(nv) + hi
+            uk, inv_k = np.unique(key, return_inverse=True)
+            cew = np.bincount(inv_k, weights=cew[live_e])
+            ceu, cev = uk // nv, uk % nv
+        else:
+            ceu = cev = np.empty(0, dtype=np.int64)
+            cew = np.empty(0, dtype=np.float64)
+    return label
+
+
+def _lpt_assign(gload: np.ndarray, m: int) -> np.ndarray:
+    """Longest-processing-time greedy: groups (descending load) onto the
+    currently lightest node.  All-equal loads short-circuit to an exact
+    round-robin (the common zero-weight / uniform case, vectorized)."""
+    ngroups = gload.size
+    a = np.zeros(ngroups, dtype=np.int64)
+    if ngroups == 0 or m <= 1:
+        return a
+    order = np.argsort(-gload, kind="stable")
+    spread = float(gload.max() - gload.min()) if ngroups else 0.0
+    if spread <= 1e-12 * max(abs(float(gload.max())), 1.0):
+        a[order] = np.arange(ngroups, dtype=np.int64) % m
+        return a
+    heap: List[Tuple[float, int]] = [(0.0, j) for j in range(m)]
+    for gi in order.tolist():
+        load, j = heapq.heappop(heap)
+        a[gi] = j
+        heapq.heappush(heap, (load + float(gload[gi]), j))
+    return a
+
+
+def _refine_arrays(w: np.ndarray, a: np.ndarray, m: int,
+                   ea: np.ndarray, eb: np.ndarray, ew: np.ndarray,
+                   alpha: float, beta: float, refine_iters: int) -> None:
+    """Greedy refinement of ``alpha * imbalance + beta * cut_volume``.
+
+    Array-native: the Δcost of moving any partition to any node is
+    evaluated for ALL (partition, node) pairs at once —
+
+    * Δimbalance (sum of squared node loads) is ``2 w_p (L_t - L_s + w_p)``,
+    * Δcut is ``cut_to[p, s] - cut_to[p, t]`` where ``cut_to[p, t]`` is the
+      weight of p's edges into partitions currently on node t (one
+      ``np.add.at`` per round over the partition-graph edge list) —
+
+    and the single best move is applied per round, until no move improves.
+    O(iters · (P·m + E_p)) instead of a first-improving-move scan's
+    O(iters · P·m·E_p), which dominated deploy beyond ~10^4 partitions.
+    ``a`` (partition -> node index) is refined in place.
+    """
+    nparts = w.size
+    if nparts == 0 or m <= 1 or refine_iters == 0:
+        return
+    loads = np.zeros(m, dtype=np.float64)
+    np.add.at(loads, a, w)
+    if ew.size and not ew.any():
+        ew = np.empty(0, dtype=np.float64)
+    rows = np.arange(nparts)
+    for _ in range(refine_iters):
+        if ew.size:
+            cut_to = np.zeros((nparts, m))
+            np.add.at(cut_to, (ea, a[eb]), ew)
+            np.add.at(cut_to, (eb, a[ea]), ew)
+            d_cut = cut_to[rows, a][:, None] - cut_to
+        else:
+            d_cut = 0.0
+        d_imb = 2.0 * w[:, None] * (loads[None, :] - loads[a][:, None]
+                                    + w[:, None])
+        delta = alpha * d_imb + beta * d_cut
+        delta[rows, a] = 0.0
+        best = int(np.argmin(delta))
+        p, t = divmod(best, m)
+        if not delta[p, t] + 1e-15 < 0.0:
+            break
+        loads[a[p]] -= w[p]
+        loads[t] += w[p]
+        a[p] = t
+
+
+# ---------------------------------------------------------------------------
+# The original dict-of-dicts mapper — kept as the semantic oracle
+# ---------------------------------------------------------------------------
+
+
+def _map_partitions_dict(pgt, live: Sequence[NodeInfo],
+                         alpha: float, beta: float,
+                         refine_iters: int) -> Dict[int, str]:
+    """The pre-CSR implementation (``mapping="dict"``): dict partition
+    graph, sorted-edge contraction, heap merge of lightest groups, greedy
+    assignment.  Retains the historical zero-weight tie-breaking (whole
+    uniform graphs land on node0) — that behaviour is exactly what the
+    CSR mapper's load-aware tie-breaks fix."""
     m = len(live)
     g = PartitionGraph.from_pgt(pgt)
     parts = sorted(g.vweights)
@@ -169,7 +444,7 @@ def map_partitions(pgt, nodes: Sequence[NodeInfo],
             assign[p] = tgt.name
         node_load[tgt.name] += cluster_load[r]
 
-    # --- KL-style refinement (vectorised best-move greedy) ---------------------
+    # --- KL-style refinement (shared vectorised best-move greedy) --------------
     _refine(g, parts, assign, live, alpha, beta, refine_iters)
 
     stamp_nodes(pgt, assign)
@@ -179,20 +454,7 @@ def map_partitions(pgt, nodes: Sequence[NodeInfo],
 def _refine(g: PartitionGraph, parts: List[int], assign: Dict[int, str],
             live: Sequence[NodeInfo], alpha: float, beta: float,
             refine_iters: int) -> None:
-    """Greedy refinement of ``alpha * imbalance + beta * cut_volume``.
-
-    Array-native: the Δcost of moving any partition to any node is
-    evaluated for ALL (partition, node) pairs at once —
-
-    * Δimbalance (sum of squared node loads) is ``2 w_p (L_t - L_s + w_p)``,
-    * Δcut is ``cut_to[p, s] - cut_to[p, t]`` where ``cut_to[p, t]`` is the
-      weight of p's edges into partitions currently on node t (one
-      ``np.add.at`` per round over the partition-graph edge list) —
-
-    and the single best move is applied per round, until no move improves.
-    O(iters · (P·m + E_p)) instead of the old first-improving-move scan's
-    O(iters · P·m·E_p), which dominated deploy beyond ~10^4 partitions.
-    """
+    """Dict-graph driver for :func:`_refine_arrays` (the oracle path)."""
     nparts = len(parts)
     m = len(live)
     if nparts == 0 or m <= 1:
@@ -203,39 +465,13 @@ def _refine(g: PartitionGraph, parts: List[int], assign: Dict[int, str],
                     dtype=np.float64, count=nparts)
     a = np.fromiter((nidx[assign[p]] for p in parts), dtype=np.int64,
                     count=nparts)
-    loads = np.zeros(m, dtype=np.float64)
-    np.add.at(loads, a, w)
-    if g.eweights:
-        ea = np.fromiter((pidx[x] for x, _ in g.eweights), dtype=np.int64,
-                         count=len(g.eweights))
-        eb = np.fromiter((pidx[y] for _, y in g.eweights), dtype=np.int64,
-                         count=len(g.eweights))
-        ew = np.fromiter(g.eweights.values(), dtype=np.float64,
-                         count=len(g.eweights))
-        if not ew.any():
-            ew = np.empty(0, dtype=np.float64)
-    else:
-        ew = np.empty(0, dtype=np.float64)
-    rows = np.arange(nparts)
-    for _ in range(refine_iters):
-        if ew.size:
-            cut_to = np.zeros((nparts, m))
-            np.add.at(cut_to, (ea, a[eb]), ew)
-            np.add.at(cut_to, (eb, a[ea]), ew)
-            d_cut = cut_to[rows, a][:, None] - cut_to
-        else:
-            d_cut = 0.0
-        d_imb = 2.0 * w[:, None] * (loads[None, :] - loads[a][:, None]
-                                    + w[:, None])
-        delta = alpha * d_imb + beta * d_cut
-        delta[rows, a] = 0.0
-        best = int(np.argmin(delta))
-        p, t = divmod(best, m)
-        if not delta[p, t] + 1e-15 < 0.0:
-            break
-        loads[a[p]] -= w[p]
-        loads[t] += w[p]
-        a[p] = t
+    ne = len(g.eweights)
+    ea = np.fromiter((pidx[x] for x, _ in g.eweights), dtype=np.int64,
+                     count=ne)
+    eb = np.fromiter((pidx[y] for _, y in g.eweights), dtype=np.int64,
+                     count=ne)
+    ew = np.fromiter(g.eweights.values(), dtype=np.float64, count=ne)
+    _refine_arrays(w, a, m, ea, eb, ew, alpha, beta, refine_iters)
     for i, p in enumerate(parts):
         assign[p] = live[int(a[i])].name
 

@@ -677,6 +677,63 @@ class CompiledPGT:
         return np.where(src_is_data, self.vol_arr[self.edge_src],
                         self.vol_arr[self.edge_dst])
 
+    def partition_graph_arrays(self) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        """The partition-level graph as flat arrays (the mapper's input).
+
+        Returns ``(ids, load, mem, count, eu, ev, ew)``:
+
+        * ``ids``   — the partition labels that occur, sorted (the sentinel
+          ``-1`` of unassigned drops is a partition key in its own right),
+        * ``load`` / ``mem`` / ``count`` — per-partition aggregate app
+          weight, data volume and drop count (``np.bincount`` over the
+          sentinel-shifted dense index),
+        * ``eu`` / ``ev`` / ``ew`` — the undirected partition-graph edge
+          list: unique cross-partition pairs as indices into ``ids``
+          (``eu < ev``) with summed edge volumes.
+
+        One pass of bincounts + one ``np.unique`` over the cross edges —
+        no per-partition or per-edge Python, which is what lets the
+        mapper keep up with million-drop graphs.
+        """
+        _, idx, shift, span = self.partition_index()
+        if span == 0:
+            e = np.empty(0, dtype=np.int64)
+            z = np.empty(0, dtype=np.float64)
+            return e, z, z.copy(), e.copy(), e.copy(), e.copy(), z.copy()
+        counts_all = np.bincount(idx, minlength=span)
+        present = counts_all > 0
+        ids = np.flatnonzero(present) - shift
+        load = np.bincount(idx, weights=self.weight_arr,
+                           minlength=span)[present]
+        mem = np.bincount(
+            idx, weights=np.where(self.kind_arr == KIND_DATA,
+                                  self.vol_arr, 0.0),
+            minlength=span)[present]
+        count = counts_all[present].astype(np.int64)
+        npart = int(ids.size)
+        dense = np.cumsum(present) - 1          # span -> dense index
+        if self.num_edges:
+            ps = dense[idx[self.edge_src]]
+            pd = dense[idx[self.edge_dst]]
+            cross = ps != pd
+        else:
+            cross = np.zeros(0, dtype=bool)
+        if cross.any():
+            lo = np.minimum(ps[cross], pd[cross]).astype(np.int64)
+            hi = np.maximum(ps[cross], pd[cross]).astype(np.int64)
+            key = lo * np.int64(npart) + hi
+            uniq, inv = np.unique(key, return_inverse=True)
+            ew = np.bincount(inv, weights=self.edge_volumes()[cross])
+            eu = uniq // npart
+            ev = uniq % npart
+        else:
+            eu = ev = np.empty(0, dtype=np.int64)
+            ew = np.empty(0, dtype=np.float64)
+        return ids, load, mem, count, eu, ev, ew
+
 
 def _kahn_levels(n: int, esrc: np.ndarray,
                  edst: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

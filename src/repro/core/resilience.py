@@ -44,7 +44,7 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from .exec_compiled import ExecHooks, _DataRef, _WaveTimeout, \
-    execute_frontier
+    execute_frontier, node_batches
 from .managers import MasterDropManager
 from .pgt import KIND_DATA, CompiledPGT, csr_gather
 from .session import (PK_FILE, PK_MEMORY, PK_NULL, ST_COMPLETED, ST_ERROR,
@@ -398,11 +398,7 @@ class ResilientRunner:
                     self._durations.append(time.monotonic() - t0)
 
         # submit every node's batch — all nodes overlap
-        nodes = pgt.node_ids[ids]
-        order = np.argsort(nodes, kind="stable")
-        run = ids[order]
-        bounds = np.flatnonzero(np.diff(nodes[order])) + 1
-        for batch in np.split(run, bounds):
+        for batch in node_batches(pgt, ids):
             node = pgt.node_names[int(pgt.node_ids[int(batch[0])])]
             nm = nms.get(node)
             if nm is None or not nm.info.alive:
@@ -587,8 +583,13 @@ def execute_resilient(session: CompiledSession, master: MasterDropManager,
         if budget <= 0:
             return False, stats
         try:
-            finished = execute_frontier(session, timeout=budget,
-                                        hooks=hooks)
+            # failure-only configs (no runner hook) still get the default
+            # threaded per-node wave overlap; recomputed per resume so
+            # freshly-dead nodes drop out of the executor map
+            finished = execute_frontier(
+                session, timeout=budget, hooks=hooks,
+                executors=None if runner is not None
+                else master.node_executors())
             return finished, stats
         except NodeFailureInterrupt as nf:
             for node in nf.nodes:

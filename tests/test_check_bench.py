@@ -1,0 +1,136 @@
+"""The CI bench-regression gate (``scripts/check_bench.py``).
+
+The gate must fail on a synthetic >30% throughput regression against the
+committed baseline, pass within tolerance, tolerate partial runs
+(missing metrics), and always write the comparison report."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    Path(__file__).resolve().parents[1] / "scripts" / "check_bench.py")
+cb = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cb)  # type: ignore[union-attr]
+
+
+def _write_results(directory: Path, compiled: float, objects: float,
+                   translate: float = 90000.0) -> None:
+    directory.mkdir(parents=True, exist_ok=True)
+    with open(directory / "bench_execute.json", "w") as fh:
+        json.dump({"benchmark": "bench_execute", "rows": [
+            {"tier": 10000, "mode": "compiled", "drops": 10003,
+             "drops_per_s": compiled},
+            {"tier": 10000, "mode": "objects", "drops": 10003,
+             "drops_per_s": objects},
+            {"tier": 10000, "mode": "recovery", "drops": 10003,
+             "recovery_s": 0.001},          # no drops_per_s: not a metric
+        ]}, fh)
+    with open(directory / "bench_translate.json", "w") as fh:
+        json.dump({"benchmark": "bench_translate", "rows": [
+            {"metric": "translate_csr_drops_per_s[w=10000;n=60001]",
+             "value": translate, "extra": ""},
+            {"metric": "pgt_save_us_per_drop[n=60001]", "value": 1.0,
+             "extra": ""},                  # latency row: skipped
+        ]}, fh)
+
+
+def _write_baseline(path: Path, compiled: float, objects: float,
+                    translate: float = 90000.0, **extra) -> None:
+    metrics = {"execute:compiled:10000:drops_per_s": compiled,
+               "execute:objects:10000:drops_per_s": objects,
+               "translate:translate_csr_drops_per_s[w=10000;n=60001]":
+                   translate}
+    metrics.update(extra)
+    with open(path, "w") as fh:
+        json.dump({"metrics": metrics}, fh)
+
+
+def _run(tmp_path: Path, argv_extra=()):
+    report = tmp_path / "report.json"
+    rc = cb.main(["--baseline", str(tmp_path / "baseline.json"),
+                  "--results-dir", str(tmp_path / "results"),
+                  "--report", str(report), *argv_extra])
+    return rc, (json.load(open(report)) if report.exists() else None)
+
+
+def test_metric_extraction(tmp_path):
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    cur = cb.collect_current(tmp_path / "results")
+    assert cur == {
+        "execute:compiled:10000:drops_per_s": 500000.0,
+        "execute:objects:10000:drops_per_s": 5000.0,
+        "translate:translate_csr_drops_per_s[w=10000;n=60001]": 90000.0,
+    }
+
+
+def test_regression_over_tolerance_fails(tmp_path):
+    # compiled throughput dropped 40% vs baseline: gate must fail
+    _write_results(tmp_path / "results", 300000.0, 5000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0)
+    rc, report = _run(tmp_path)
+    assert rc == 1
+    assert [f["metric"] for f in report["failures"]] == \
+        ["execute:compiled:10000:drops_per_s"]
+    assert report["tolerance"] == pytest.approx(0.30)
+
+
+def test_within_tolerance_passes(tmp_path):
+    # 20% down on every metric: within the 30% tolerance
+    _write_results(tmp_path / "results", 400000.0, 4000.0, 72000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0, 90000.0)
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    assert report["failures"] == []
+    assert all(r["status"] == "ok" for r in report["checked"])
+
+
+def test_missing_metric_reported_not_failed(tmp_path):
+    # partial run (e.g. CI smoke skips a tier): missing != regressed
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    **{"execute:compiled:1000000:drops_per_s": 1e6})
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    missing = [r for r in report["checked"] if r["status"] == "missing"]
+    assert [r["metric"] for r in missing] == \
+        ["execute:compiled:1000000:drops_per_s"]
+
+
+def test_tolerance_override(tmp_path):
+    # a 20% drop fails when the caller tightens tolerance to 10%
+    _write_results(tmp_path / "results", 400000.0, 5000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0)
+    rc, report = _run(tmp_path, ["--tolerance", "0.10"])
+    assert rc == 1
+    assert len(report["failures"]) == 1
+
+
+def test_missing_baseline_is_configuration_error(tmp_path):
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    rc, _ = _run(tmp_path)
+    assert rc == 2
+
+
+def test_write_baseline_applies_headroom(tmp_path):
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    rc, _ = _run(tmp_path, ["--write-baseline", "--headroom", "0.5"])
+    assert rc == 0
+    doc = json.load(open(tmp_path / "baseline.json"))
+    assert doc["metrics"]["execute:compiled:10000:drops_per_s"] == \
+        pytest.approx(250000.0)
+    # the freshly-written baseline gates the same results cleanly
+    rc, report = _run(tmp_path)
+    assert rc == 0 and report["failures"] == []
+
+
+def test_repo_baseline_matches_repo_results():
+    """The committed baseline must stay consistent with the committed
+    smoke results — a PR that improves throughput should refresh both."""
+    root = Path(__file__).resolve().parents[1]
+    baseline = json.load(open(root / "results" / "baseline.json"))
+    current = cb.collect_current(root / "results")
+    report = cb.compare(current, baseline["metrics"], cb.DEFAULT_TOLERANCE)
+    assert report["failures"] == [], report["failures"]
