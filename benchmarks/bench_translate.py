@@ -57,6 +57,26 @@ def make_lg(width: int, depth: int = 3):
     return g.graph()
 
 
+def make_loop_lg(iters: int, width: int):
+    """CHILES-style self-cal shape: a carried value drives a scattered
+    compute stage each iteration (~``2*width + 2`` drops/iteration)."""
+    g = GraphBuilder(f"loop{iters}x{width}")
+    g.data("init", volume=1e5)
+    g.component("seed", app="identity", time=0.001)
+    with g.loop("lp", iters):
+        g.data("x", loop_entry=True)
+        with g.scatter("sc", width):
+            g.component("deg", app="noop", time=0.002)
+            g.data("vis", volume=1e6)
+        g.component("cal", app="noop", time=0.004)
+        g.data("y", loop_exit=True, carries="x", volume=1e5)
+    g.component("fin", app="identity", time=0.001)
+    g.data("img")
+    g.chain("init", "seed", "x", "deg", "vis", "cal", "y")
+    g.chain("y", "fin", "img")
+    return g.graph()
+
+
 Row = Tuple[str, float, str]
 
 
@@ -121,6 +141,48 @@ def _million_row(target_drops: int = 1_000_000) -> List[Row]:
              f"makespan={res.makespan:.4f}")]
 
 
+def _loop_rows(iters: int = 100, drops_per_iter: int = 10_000,
+               compare_dict: bool = True) -> List[Row]:
+    """Loop-carried tier: iteration aliasing through the array path.
+
+    Before PR 5 loop graphs bypassed the vectorized unroll entirely
+    (per-instance ``unroll_dict`` fallback, ~28x slower); the dict
+    comparison runs at a small size to keep the tier finishable and
+    reports the measured gap."""
+    rows: List[Row] = []
+    if compare_dict:
+        small_iters, small_width = 20, 250
+        lg = make_loop_lg(small_iters, small_width)
+        t0 = time.monotonic()
+        old = unroll_dict(lg)
+        t_dict = time.monotonic() - t0
+        n_small = len(old)
+        del old
+        t1 = time.monotonic()
+        new = unroll(lg)
+        t_csr = time.monotonic() - t1
+        assert len(new) == n_small
+        rows.append((
+            f"unroll_loop_csr_drops_per_s[iters={small_iters};n={n_small}]",
+            n_small / t_csr,
+            f"total_s={t_csr:.3f};dict_s={t_dict:.3f};"
+            f"speedup={t_dict / t_csr:.1f}x"))
+
+    width = max((drops_per_iter - 2) // 2, 1)
+    lg = make_loop_lg(iters, width)
+    t0 = time.monotonic()
+    pgt = unroll(lg)
+    t_unroll = time.monotonic() - t0
+    n = len(pgt)
+    res = min_time(pgt, dop=8)
+    t_total = time.monotonic() - t0
+    rows.append((
+        f"translate_loop_drops_per_s[iters={iters};n={n}]", n / t_total,
+        f"unroll_s={t_unroll:.3f};total_s={t_total:.3f};"
+        f"partitions={res.num_partitions};makespan={res.makespan:.4f}"))
+    return rows
+
+
 def _io_rows(width: int = 10000) -> List[Row]:
     # streaming (de)serialisation throughput (paper §3.7 ijson experiment)
     pgt = unroll(make_lg(width))
@@ -147,6 +209,7 @@ def run(widths=(1000, 10000, 50000), compare_width: int = 50000,
     rows = _unroll_rows(widths)
     rows += _translate_rows(compare_width)
     rows += _million_row(million_drops)
+    rows += _loop_rows()
     rows += _io_rows()
     return rows
 
@@ -169,9 +232,17 @@ def main() -> None:
                     help="CSR-only smoke run at this logical width")
     ap.add_argument("--drops", type=int, default=1_000_000,
                     help="target physical-graph size for the big tier")
+    ap.add_argument("--loop", action="store_true",
+                    help="loop-carried tier only (iteration aliasing)")
+    ap.add_argument("--loop-iters", type=int, default=100)
+    ap.add_argument("--loop-drops-per-iter", type=int, default=10_000)
     args = ap.parse_args()
-    rows = smoke(args.width) if args.width else run(
-        million_drops=args.drops)
+    if args.loop:
+        rows = _loop_rows(args.loop_iters, args.loop_drops_per_iter)
+    elif args.width:
+        rows = smoke(args.width)
+    else:
+        rows = run(million_drops=args.drops)
     for name, val, extra in rows:
         print(f"{name},{val:.2f},{extra}")
     emit_json(rows)

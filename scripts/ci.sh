@@ -23,6 +23,9 @@ fi
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     echo "== translate smoke bench (width 10000) =="
     python benchmarks/bench_translate.py --width 10000
+    echo "== translate loop smoke bench (20 iters x 500 drops/iter) =="
+    python benchmarks/bench_translate.py --loop --loop-iters 20 \
+        --loop-drops-per-iter 500
     echo "== execute smoke bench (10k drops, objects vs compiled) =="
     python benchmarks/bench_execute.py --tiers 10000
     echo "== recovery smoke bench (10k drops, kill 1 of 8 nodes at 50%) =="

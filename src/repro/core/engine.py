@@ -134,9 +134,10 @@ class Pipeline:
         t0 = time.monotonic()
         if self.execution == "compiled":
             if not isinstance(pgt, CompiledPGT):
-                # loop-carried graphs still unroll via the dict fallback;
-                # lift them so the compiled engine can run them (only
-                # replace self.pgt when it IS the graph being lifted)
+                # translate() always yields a CompiledPGT now (loop-carried
+                # graphs included); this lift only remains for explicitly
+                # supplied dict PGTs, e.g. hand-built or deserialised ones
+                # (only replace self.pgt when it IS the graph being lifted)
                 pgt = CompiledPGT.from_dict_pgt(pgt)
                 if not supplied:
                     self.pgt = pgt

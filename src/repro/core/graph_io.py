@@ -17,7 +17,7 @@ from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from .logical import LogicalGraph, LogicalGraphTemplate
-from .pgt import CompiledPGT
+from .pgt import CompiledPGT, _uid_str
 from .unroll import DropSpec, PhysicalGraphTemplate
 
 
@@ -54,6 +54,43 @@ def _spec_from_json(d: Dict[str, Any]) -> DropSpec:
     return DropSpec(**d)
 
 
+def _iter_drop_records(pgt) -> Any:
+    """Per-drop JSON dicts; CompiledPGTs in group-derived (array-native)
+    mode are walked group by group straight off the arrays — no
+    ``DropView`` attribute machinery, no per-drop group bisect — which is
+    several times cheaper at million-drop scale."""
+    if not (isinstance(pgt, CompiledPGT) and pgt._uids is None):
+        for spec in pgt.drops.values():
+            yield _spec_to_json(spec)
+        return
+    import itertools
+    part = pgt.partition
+    node_ids = pgt.node_ids
+    names = pgt.node_names
+    exec_arr, vol_arr = pgt.exec_arr, pgt.vol_arr
+    err = pgt.err_arr
+    overrides = pgt._params_override
+    for g in pgt.groups:
+        kind = "data" if g.kind == 1 else "app"
+        ranges = [range(s) for s in g.sizes]
+        for local, oid in enumerate(itertools.product(*ranges)):
+            i = g.base + local
+            uid = _uid_str(g.name, oid)
+            nid = node_ids[i]
+            yield {
+                "uid": uid, "kind": kind, "construct": g.name,
+                "oid": list(oid), "app": g.app,
+                "payload_kind": g.payload_kind,
+                "execution_time": float(exec_arr[i]),
+                "data_volume": float(vol_arr[i]),
+                "error_threshold": (float(err[i]) if err is not None
+                                    else g.error_threshold),
+                "params": overrides.get(i, g.params),
+                "partition": int(part[i]),
+                "node": None if nid < 0 else names[nid],
+            }
+
+
 def save_pgt(pgt: PhysicalGraphTemplate, path: str,
              chunk: int = 10000) -> None:
     """Stream the PGT out as gzip JSONL: header, then drops, then edges."""
@@ -62,8 +99,8 @@ def save_pgt(pgt: PhysicalGraphTemplate, path: str,
                              "num_drops": len(pgt.drops),
                              "num_edges": len(pgt.edges)}) + "\n")
         buf: List[Dict[str, Any]] = []
-        for spec in pgt.drops.values():
-            buf.append(_spec_to_json(spec))
+        for rec in _iter_drop_records(pgt):
+            buf.append(rec)
             if len(buf) >= chunk:
                 fh.write(json.dumps({"type": "drops", "items": buf}) + "\n")
                 buf = []

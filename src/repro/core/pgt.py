@@ -358,7 +358,8 @@ class CompiledPGT:
                  uids: Optional[List[str]] = None,
                  oids: Optional[List[Tuple[int, ...]]] = None,
                  group_idx: Optional[np.ndarray] = None,
-                 validate_dag: bool = True) -> None:
+                 validate_dag: bool = True,
+                 levels: Optional[np.ndarray] = None) -> None:
         self.name = name
         self.groups = groups
         self._group_idx = group_idx   # explicit per-drop group mapping
@@ -390,9 +391,13 @@ class CompiledPGT:
         self._in_eid: Optional[
             Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
         self._indeg: Optional[np.ndarray] = None
-        self._levels: Optional[np.ndarray] = None
+        # precomputed longest-path levels (the vectorized unroll derives
+        # them from the logical leaf DAG for loop-free graphs, whose
+        # expansion is acyclic by construction — no Kahn pass needed)
+        self._levels: Optional[np.ndarray] = levels
         self._order: Optional[np.ndarray] = None
-        if validate_dag:
+        self._evol: Optional[np.ndarray] = None
+        if validate_dag and levels is None:
             self.topological_order_ids()   # raises on cycles
 
     # ------------------------------------------------------------------
@@ -627,8 +632,13 @@ class CompiledPGT:
 
     def topological_order_ids(self) -> np.ndarray:
         if self._order is None:
-            self._order, self._levels = _kahn_levels(
-                self.num_drops, self.edge_src, self.edge_dst)
+            if self._levels is not None:
+                # level-major, ascending id within a level — exactly the
+                # frontier order the vectorized Kahn emits
+                self._order = np.argsort(self._levels, kind="stable")
+            else:
+                self._order, self._levels = _kahn_levels(
+                    self.num_drops, self.edge_src, self.edge_dst)
         return self._order
 
     def topo_levels(self) -> np.ndarray:
@@ -672,10 +682,18 @@ class CompiledPGT:
         return ids, agg
 
     def edge_volumes(self) -> np.ndarray:
-        """Per-edge moved bytes: src volume for data sources, else dst's."""
-        src_is_data = self.kind_arr[self.edge_src] == KIND_DATA
-        return np.where(src_is_data, self.vol_arr[self.edge_src],
-                        self.vol_arr[self.edge_dst])
+        """Per-edge moved bytes: src volume for data sources, else dst's.
+        Memoised — translate evaluates it once for the merge order and
+        once per scheduling-array extraction."""
+        if self._evol is None:
+            if not self.vol_arr.any():
+                self._evol = np.zeros(self.num_edges, dtype=np.float64)
+            else:
+                src_is_data = self.kind_arr[self.edge_src] == KIND_DATA
+                self._evol = np.where(src_is_data,
+                                      self.vol_arr[self.edge_src],
+                                      self.vol_arr[self.edge_dst])
+        return self._evol
 
     def partition_graph_arrays(self) -> Tuple[np.ndarray, np.ndarray,
                                               np.ndarray, np.ndarray,
@@ -740,7 +758,10 @@ def _kahn_levels(n: int, esrc: np.ndarray,
     """Vectorized level-synchronous Kahn: (topo order, longest-path level).
 
     Each round processes the whole zero-indegree frontier with numpy
-    bincounts, so the Python loop runs once per DAG *level*, not per node.
+    gathers, so the Python loop runs once per DAG *level*, not per node —
+    and per-round work is proportional to the frontier's out-edges, not to
+    the graph (deep graphs like unrolled loops have many small levels; a
+    full-width bincount per level would make validation O(levels * n)).
     Raises on cycles.
     """
     if n == 0:
@@ -771,8 +792,16 @@ def _kahn_levels(n: int, esrc: np.ndarray,
                 ([0], np.cumsum(cnt)[:-1])), cnt)
             pos = np.arange(total, dtype=np.int64) + reps
             succ = sorted_dst[pos]
-            indeg -= np.bincount(succ, minlength=n)
-        frontier = np.flatnonzero(indeg == 0)
+            if total < n >> 4:
+                np.subtract.at(indeg, succ, 1)
+                # only decremented nodes can have reached zero; unique
+                # keeps the frontier sorted like flatnonzero would
+                frontier = np.unique(succ[indeg[succ] == 0])
+            else:
+                indeg -= np.bincount(succ, minlength=n)
+                frontier = np.flatnonzero(indeg == 0)
+        else:
+            frontier = np.empty(0, dtype=np.int64)
         level += 1
     if done != n:
         raise GraphValidationError("physical graph contains a cycle")

@@ -61,12 +61,47 @@ class _Arrays:
     """
 
     __slots__ = ("n", "weight", "is_data", "esrc", "edst", "evol",
-                 "out_indptr", "out_dst", "out_eid", "levels", "order",
-                 "_lists", "_ecost_l")
+                 "levels", "_order", "_build_order", "_out_csr",
+                 "_build_out_csr", "_lists", "_ecost_l", "_lvl_struct",
+                 "_in_csr")
 
     def __init__(self) -> None:
+        self._order = None      # topological order, lazy (rarely used)
+        self._build_order = None
+        self._out_csr = None    # (indptr, dst ids, eid) by source, lazy
         self._lists = None      # (weight, is_data, indptr, out_dst, preds)
         self._ecost_l = None    # (bandwidth, CSR-ordered edge costs)
+        self._lvl_struct = None  # level-bucketed edge/node orders
+        self._in_csr = None     # (indptr, src ids, eid) by destination
+
+    @property
+    def order(self) -> np.ndarray:
+        if self._order is None:
+            self._order = self._build_order()
+        return self._order
+
+    @order.setter
+    def order(self, value: np.ndarray) -> None:
+        self._order = value
+
+    @property
+    def out_indptr(self) -> np.ndarray:
+        return self.out_csr()[0]
+
+    @property
+    def out_dst(self) -> np.ndarray:
+        return self.out_csr()[1]
+
+    @property
+    def out_eid(self) -> np.ndarray:
+        return self.out_csr()[2]
+
+    def out_csr(self):
+        """Forward CSR, built on first use — the large-graph estimator
+        path never touches it unless a delta propagation runs."""
+        if self._out_csr is None:
+            self._out_csr = self._build_out_csr()
+        return self._out_csr
 
     def partition_of(self, pgt) -> np.ndarray:
         if isinstance(pgt, CompiledPGT):
@@ -89,6 +124,43 @@ class _Arrays:
                 bandwidth, (self.evol / bandwidth)[self.out_eid].tolist())
         return self._lists + (self._ecost_l[1],)
 
+    def level_structure(self):
+        """Level-bucketed edge and node orders for the critical-path pass.
+
+        Partition-independent (only edge *costs* change between calls), so
+        it is computed once per PGT and shared by every evaluation — the
+        prefix sweep in ``min_time`` used to redo these argsorts at every
+        checkpoint.  Returns ``(esrc_s, edst_s, eid_s, bounds, node_order,
+        nbounds, max_level)``; the edge triplets are sorted by destination
+        level with ``bounds[lv]:bounds[lv+1]`` slicing out one level.
+        """
+        if self._lvl_struct is None:
+            levels = self.levels
+            max_lv = int(levels.max()) if self.n else 0
+            if self.esrc.size:
+                edge_lv = levels[self.edst]
+                e_order = np.argsort(edge_lv, kind="stable")
+                edge_lv_sorted = edge_lv[e_order]
+                bounds = np.searchsorted(
+                    edge_lv_sorted, np.arange(edge_lv_sorted[-1] + 2))
+                esrc_s, edst_s = self.esrc[e_order], self.edst[e_order]
+            else:
+                e_order = np.empty(0, dtype=np.int64)
+                bounds = None
+                esrc_s = edst_s = e_order
+            node_order = np.argsort(levels, kind="stable")
+            nbounds = np.searchsorted(
+                levels[node_order], np.arange(max_lv + 2))
+            self._lvl_struct = (esrc_s, edst_s, e_order, bounds,
+                                node_order, nbounds, max_lv)
+        return self._lvl_struct
+
+    def in_csr(self):
+        """(indptr, src ids, COO edge ids) sorted by destination."""
+        if self._in_csr is None:
+            self._in_csr = coo_to_csr(self.n, self.edst, self.esrc)
+        return self._in_csr
+
 
 def _extract(pgt) -> _Arrays:
     cached = getattr(pgt, "_sched_arrays", None)
@@ -103,7 +175,7 @@ def _extract(pgt) -> _Arrays:
         a.edst = pgt.edge_dst.astype(np.int64)
         a.evol = pgt.edge_volumes()
         a.levels = pgt.topo_levels()
-        a.order = pgt.topological_order_ids()
+        a._build_order = pgt.topological_order_ids
     else:
         ids: Dict[str, int] = {u: i for i, u in enumerate(pgt.drops)}
         a.n = len(ids)
@@ -127,9 +199,9 @@ def _extract(pgt) -> _Arrays:
                          else drops[d].data_volume)
         a.order, a.levels = _kahn_levels(a.n, a.esrc, a.edst)
     if isinstance(pgt, CompiledPGT):
-        a.out_indptr, a.out_dst, a.out_eid = pgt.out_csr_with_eid()
+        a._build_out_csr = pgt.out_csr_with_eid
     else:
-        a.out_indptr, a.out_dst, a.out_eid = coo_to_csr(a.n, a.esrc, a.edst)
+        a._build_out_csr = lambda: coo_to_csr(a.n, a.esrc, a.edst)
     try:
         pgt._sched_arrays = a
     except AttributeError:  # pragma: no cover - slots-only containers
@@ -145,33 +217,23 @@ def _extract(pgt) -> _Arrays:
 # ---------------------------------------------------------------------------
 
 
-def _critical_path_arrays(a: _Arrays, part: Optional[np.ndarray],
-                          bandwidth: float) -> float:
-    """Longest path; edges cost vol/bandwidth when crossing partitions
-    (or always, when ``part`` is None — the unpartitioned bound)."""
+def _critical_path_dist(a: _Arrays, part: Optional[np.ndarray],
+                        bandwidth: float) -> np.ndarray:
+    """Per-drop longest-path finish time; edges cost vol/bandwidth when
+    crossing partitions (or always, when ``part`` is None — the
+    unpartitioned bound).  Level-synchronous over the cached
+    :meth:`_Arrays.level_structure` — no per-call argsorts."""
+    dist = np.zeros(a.n, dtype=np.float64)
     if a.n == 0:
-        return 0.0
+        return dist
+    esrc_s, edst_s, e_order, bounds, node_order, nbounds, max_lv = \
+        a.level_structure()
     ecost = a.evol / bandwidth
     if part is not None and a.esrc.size:
         ecost = ecost * (part[a.esrc] != part[a.edst])
-    dist = np.zeros(a.n, dtype=np.float64)
+    ecost_s = ecost[e_order]
     best = np.zeros(a.n, dtype=np.float64)
-    levels = a.levels
-    if a.esrc.size:
-        edge_lv = levels[a.edst]
-        e_order = np.argsort(edge_lv, kind="stable")
-        edge_lv_sorted = edge_lv[e_order]
-        bounds = np.searchsorted(
-            edge_lv_sorted, np.arange(edge_lv_sorted[-1] + 2))
-        esrc_s, edst_s, ecost_s = (a.esrc[e_order], a.edst[e_order],
-                                   ecost[e_order])
-    else:
-        bounds = None
-    node_order = np.argsort(levels, kind="stable")
-    node_lv_sorted = levels[node_order]
-    nbounds = np.searchsorted(
-        node_lv_sorted, np.arange(int(levels.max()) + 2))
-    for lv in range(int(levels.max()) + 1):
+    for lv in range(max_lv + 1):
         nodes = node_order[nbounds[lv]:nbounds[lv + 1]]
         if lv > 0 and bounds is not None and lv < len(bounds) - 1:
             lo, hi = bounds[lv], bounds[lv + 1]
@@ -179,7 +241,137 @@ def _critical_path_arrays(a: _Arrays, part: Optional[np.ndarray],
                 np.maximum.at(best, edst_s[lo:hi],
                               dist[esrc_s[lo:hi]] + ecost_s[lo:hi])
         dist[nodes] = best[nodes] + a.weight[nodes]
-    return float(dist.max())
+    return dist
+
+
+def _critical_path_arrays(a: _Arrays, part: Optional[np.ndarray],
+                          bandwidth: float) -> float:
+    if a.n == 0:
+        return 0.0
+    return float(_critical_path_dist(a, part, bandwidth).max())
+
+
+class PrefixCP:
+    """Incremental partitioned critical-path evaluator.
+
+    Tracks the longest-path state (per-drop finish times) across a
+    *sequence* of label assignments over one graph.  Each
+    :meth:`evaluate` call recomputes only the region downstream of edges
+    whose partition-crossing status changed since the previous call —
+    during ``min_time``'s prefix sweep the merges are monotone (edges only
+    become internal), so consecutive checkpoints share almost all of their
+    critical-path state.  Arbitrary relabelings (e.g. ``min_res`` fold
+    probes) are also handled — recompute cost stays proportional to the
+    affected region, degrading to one full pass at worst.  Every step is
+    exactly equivalent to ``_critical_path_arrays(a, labels, bandwidth)``.
+    """
+
+    def __init__(self, a: _Arrays, bandwidth: float) -> None:
+        self.a = a
+        self.bandwidth = bandwidth
+        self._ecost = a.evol / bandwidth
+        # a zero-cost edge contributes nothing whether it crosses or not —
+        # its status changes can never move the critical path, so the
+        # delta pass ignores them outright (app->data edges of volume-0
+        # drops are common, and entire cost-free graphs short-circuit)
+        self._costly = self._ecost != 0.0
+        self._has_costly = bool(self._costly.any())
+        # a graph with no costly edges AND no weights schedules to 0.0
+        # under any labelling — the degenerate overhead-bench shape
+        self._zero = (not self._has_costly
+                      and (a.n == 0 or float(a.weight.max()) == 0.0))
+        self._cross: Optional[np.ndarray] = None   # per-edge crossing mask
+        self._dist: Optional[np.ndarray] = None
+        self._in: Optional[Tuple[np.ndarray, ...]] = None
+        self.delta_evals = 0      # instrumentation: delta vs full passes
+        self.full_evals = 0
+
+    # -- internals ---------------------------------------------------------
+    def _full(self, labels: Optional[np.ndarray]) -> float:
+        self._dist = _critical_path_dist(self.a, labels, self.bandwidth)
+        self.full_evals += 1
+        return float(self._dist.max()) if self.a.n else 0.0
+
+    def _push(self, pend: Dict[int, List[np.ndarray]],
+              nodes: np.ndarray) -> None:
+        ls = self.a.levels[nodes]
+        order = np.argsort(ls, kind="stable")
+        nodes, ls = nodes[order], ls[order]
+        cuts = np.flatnonzero(np.diff(ls)) + 1
+        starts = np.concatenate(([0], cuts))
+        for chunk, lv in zip(np.split(nodes, cuts), ls[starts]):
+            pend.setdefault(int(lv), []).append(chunk)
+
+    def evaluate(self, labels: Optional[np.ndarray]) -> float:
+        a = self.a
+        if a.n == 0 or self._zero:
+            return 0.0
+        if self._dist is not None and not self._has_costly:
+            # crossing-status changes cannot move any path cost
+            return float(self._dist.max())
+        if a.esrc.size == 0:
+            cross = np.empty(0, dtype=bool)
+        elif labels is None:
+            cross = np.ones(a.esrc.shape[0], dtype=bool)
+        else:
+            cross = labels[a.esrc] != labels[a.edst]
+        if self._dist is None:
+            self._cross = cross
+            return self._full(labels)
+        changed = np.flatnonzero((cross != self._cross) & self._costly)
+        self._cross = cross
+        if changed.size == 0:
+            return float(self._dist.max())
+        self.delta_evals += 1
+        return self._propagate(np.unique(a.edst[changed]))
+
+    def _propagate(self, seeds: np.ndarray) -> float:
+        """Level-ordered recompute of ``dist`` for ``seeds`` and whatever
+        their changes reach downstream."""
+        a = self.a
+        dist = self._dist
+        cross = self._cross
+        assert dist is not None and cross is not None
+        if a.esrc.size == 0:
+            np.copyto(dist, a.weight)
+            return float(dist.max())
+        if self._in is None:
+            in_indptr, in_src, in_eid = a.in_csr()
+            self._in = (in_indptr, in_src, in_eid, self._ecost[in_eid])
+        in_indptr, in_src, in_eid, in_cost = self._in
+        pend: Dict[int, List[np.ndarray]] = {}
+        self._push(pend, seeds)
+        while pend:
+            lv = min(pend)
+            nodes = np.unique(np.concatenate(pend.pop(lv)))
+            starts = in_indptr[nodes]
+            cnt = in_indptr[nodes + 1] - starts
+            new = a.weight[nodes].copy()    # no-pred base: weight alone
+            total = int(cnt.sum())
+            if total:
+                reps = np.repeat(
+                    starts - np.concatenate(([0], np.cumsum(cnt)[:-1])),
+                    cnt)
+                pos = np.arange(total, dtype=np.int64) + reps
+                cand = dist[in_src[pos]] \
+                    + in_cost[pos] * cross[in_eid[pos]]
+                nz = cnt > 0
+                row_start = np.concatenate(([0], np.cumsum(cnt)[:-1]))
+                new[nz] = np.maximum.reduceat(cand, row_start[nz]) \
+                    + a.weight[nodes[nz]]
+            moved = new != dist[nodes]
+            if moved.any():
+                chn = nodes[moved]
+                dist[chn] = new[moved]
+                s0 = a.out_indptr[chn]
+                c0 = a.out_indptr[chn + 1] - s0
+                tot = int(c0.sum())
+                if tot:
+                    reps = np.repeat(
+                        s0 - np.concatenate(([0], np.cumsum(c0)[:-1])), c0)
+                    pos2 = np.arange(tot, dtype=np.int64) + reps
+                    self._push(pend, np.unique(a.out_dst[pos2]))
+        return float(dist.max())
 
 
 def critical_path(pgt, bandwidth: float = DEFAULT_BANDWIDTH,

@@ -21,7 +21,15 @@ coordinates**: shared axes align, a dst-range (Gather) fans in, a missing axis
 on the dst side (GroupBy / graph-level reduce) consumes the full range, a
 missing axis on the src side broadcasts.  Loop-carried Data nodes are aliased:
 iteration ``t``'s ``loop_entry`` *is* iteration ``t-1``'s ``loop_exit`` drop
-("new Data Drops created in each iteration", paper §2.3).
+("new Data Drops created in each iteration", paper §2.3), and a ``loop_exit``
+consumed *outside* its loop contributes only the final iteration's value —
+flows crossing the loop boundary shed the loop axis.
+
+Both the reference dict path (:func:`unroll_dict`) and the vectorized array
+path (:func:`unroll` -> :class:`~repro.core.pgt.CompiledPGT`) implement the
+same semantics; the array path expresses iteration aliasing as index
+substitution on block-diagonal per-iteration edge maps instead of
+per-instance dict walks.
 """
 from __future__ import annotations
 
@@ -201,13 +209,34 @@ class AxisResolver:
         best: Optional[List[Axis]] = None
         for e in self.lg.edges:
             if e.dst in inside and e.src not in inside:
-                axes = self.leaf_axes(e.src)
+                axes = self._flow_axes(e.src, name)
                 if best is None or len(axes) > len(best):
                     best = axes
         if best is None:
             raise GraphValidationError(
                 f"{name!r} has no incoming flow to aggregate")
         return list(best)
+
+    def _flow_axes(self, src: str, container: str) -> List[Axis]:
+        """Axes the flow from ``src`` contributes to ``container``.
+
+        A ``loop_exit`` crossing its loop boundary leaves the loop axis
+        behind: the loop emits exactly one (final-iteration) value (paper
+        §2.3), so a Gather/GroupBy *outside* the loop aggregates over the
+        remaining (scatter) axes, not over iterations.  The matching
+        coordinate pin happens at unroll time (``exit_pin``).
+        """
+        axes = list(self.leaf_axes(src))
+        c = self.lg.constructs[src]
+        if c.kind is Kind.DATA and c.loop_exit:
+            loops = [a for a in self.lg.ancestors(src)
+                     if a.kind is Kind.LOOP]
+            if loops:
+                loop_name = loops[-1].name
+                anc = {a.name for a in self.lg.ancestors(container)}
+                if loop_name not in anc:
+                    axes = [a for a in axes if a.underlying != loop_name]
+        return axes
 
     def _container_axes(self, name: Optional[str]) -> List[Axis]:
         if name in self._cont_cache:
@@ -270,12 +299,77 @@ def _uid(name: str, idx: Tuple[int, ...]) -> str:
     return name if not idx else f"{name}#{'.'.join(map(str, idx))}"
 
 
+@dataclass
+class _Carry:
+    """Loop-carry record for one ``loop_entry`` leaf."""
+
+    exit: str            # the loop_exit construct that carries into it
+    loop: str            # the (innermost) Loop construct name
+    pos: Optional[int]   # index of the loop axis within the entry's axes
+
+
+def _carried_loops(lg: LogicalGraph, leaves: Sequence[Construct],
+                   axes_of: Dict[str, List[Axis]]) -> Dict[str, "_Carry"]:
+    """Resolve and validate loop-carried entry/exit pairs (entry-keyed).
+
+    Shared by the dict oracle and the vectorized path so both reject the
+    same ill-formed graphs: duplicate carriers, chained carries (an exit
+    that is itself a carried entry — its t>0 instances would alias drops
+    that were never created), and entry/exit axis misalignment (the alias
+    substitutes surviving indices by axis name, which silently produced
+    dangling uids when sizes or Gather groupings differed).
+    """
+    carries: Dict[str, _Carry] = {}
+    for c in leaves:
+        if not (c.kind is Kind.DATA and c.loop_exit):
+            continue
+        entry = c.params.get("carries")
+        if not entry or entry not in lg.constructs:
+            raise GraphValidationError(
+                f"loop_exit {c.name!r} must name its 'carries' entry")
+        e = lg.constructs[entry]
+        if not e.loop_entry:
+            raise GraphValidationError(
+                f"{entry!r} is not marked loop_entry")
+        loops = [a for a in lg.ancestors(c.name) if a.kind is Kind.LOOP]
+        if not loops:
+            raise GraphValidationError(
+                f"loop_exit {c.name!r} is outside any Loop")
+        if entry in carries:
+            raise GraphValidationError(
+                f"loop_entry {entry!r} carried by both "
+                f"{carries[entry].exit!r} and {c.name!r}")
+        la = loops[-1].name
+        pos = None
+        for i, ax in enumerate(axes_of[entry]):
+            if ax.underlying == la:
+                pos = i
+                break
+        carries[entry] = _Carry(exit=c.name, loop=la, pos=pos)
+    for entry, car in carries.items():
+        if car.exit in carries:
+            raise GraphValidationError(
+                f"chained loop carry: exit {car.exit!r} is itself a "
+                "carried loop_entry")
+        if car.pos is None:
+            continue
+        ent_ax = {a.underlying: a for a in axes_of[entry]}
+        for a in axes_of[car.exit]:
+            b = ent_ax.get(a.underlying)
+            if b is None or b.size != a.size or b.group != a.group:
+                raise GraphValidationError(
+                    f"loop carry {entry!r} <- {car.exit!r}: axis "
+                    f"{a.underlying!r} does not align between entry and "
+                    "exit instances")
+    return carries
+
+
 def unroll_dict(lg: LogicalGraph) -> PhysicalGraphTemplate:
     """Reference dict-of-DropSpec unroll (the seed path).
 
     Kept as the semantic oracle for the vectorized CSR path (see
-    :func:`unroll`) and as the fallback for loop-carried graphs, whose
-    iteration-aliasing is inherently per-instance.
+    :func:`unroll`), including loop-carried graphs, whose iteration
+    aliasing the array path expresses as index substitution.
     """
     lg.validate()
     pgt = PhysicalGraphTemplate(name=lg.name)
@@ -285,36 +379,7 @@ def unroll_dict(lg: LogicalGraph) -> PhysicalGraphTemplate:
     axes_of: Dict[str, List[Axis]] = {
         c.name: resolver.leaf_axes(c.name) for c in leaves}
 
-    # --- loop-carried aliasing ------------------------------------------------
-    # map (entry_name, loop_coord) -> exit construct name, for t > 0
-    carries: Dict[str, str] = {}          # entry -> exit
-    loop_axis_of: Dict[str, str] = {}     # entry -> loop construct name
-    for c in leaves:
-        if c.kind is Kind.DATA and c.loop_exit:
-            entry = c.params.get("carries")
-            if not entry or entry not in lg.constructs:
-                raise GraphValidationError(
-                    f"loop_exit {c.name!r} must name its 'carries' entry")
-            e = lg.constructs[entry]
-            if not e.loop_entry:
-                raise GraphValidationError(
-                    f"{entry!r} is not marked loop_entry")
-            carries[entry] = c.name
-            loops = [a for a in lg.ancestors(c.name) if a.kind is Kind.LOOP]
-            if not loops:
-                raise GraphValidationError(
-                    f"loop_exit {c.name!r} is outside any Loop")
-            loop_axis_of[entry] = loops[-1].name
-
-    def loop_pos(leaf: str) -> Optional[int]:
-        """Index of the carried loop axis within the leaf's axes."""
-        la = loop_axis_of.get(leaf)
-        if la is None:
-            return None
-        for i, ax in enumerate(axes_of[leaf]):
-            if ax.underlying == la:
-                return i
-        return None
+    carries = _carried_loops(lg, leaves, axes_of)
 
     # --- instantiate drops ------------------------------------------------------
     # alias: (construct, idx) -> uid actually used
@@ -322,11 +387,12 @@ def unroll_dict(lg: LogicalGraph) -> PhysicalGraphTemplate:
 
     for c in leaves:
         axes = axes_of[c.name]
-        lp = loop_pos(c.name) if c.name in carries else None
+        car = carries.get(c.name)
+        lp = car.pos if car is not None else None
         for idx in itertools.product(*(range(a.size) for a in axes)):
             if lp is not None and idx[lp] > 0:
                 # entry at iteration t>0 aliases exit at t-1
-                exit_name = carries[c.name]
+                exit_name = car.exit
                 prev = list(idx)
                 prev[lp] -= 1
                 # exit axes may be ordered differently; align by axis name
@@ -409,37 +475,44 @@ class _NeedsFallback(Exception):
     """Raised when an edge pattern has no closed-form array expansion."""
 
 
+def _strides_of(sizes: Sequence[int]) -> List[int]:
+    """C-order strides for ``sizes`` (innermost stride 1)."""
+    out: List[int] = []
+    acc = 1
+    for s in reversed(sizes):
+        out.append(acc)
+        acc *= s
+    out.reverse()
+    return out
+
+
 def _expand_edge(s_axes: List[Axis], d_axes: List[Axis],
-                 s_base: int, d_base: int):
+                 s_base: int, d_base: int,
+                 pin: Optional[Dict[str, int]] = None):
     """Vectorized instance-wise edge expansion for one logical edge.
 
     Mirrors the per-instance join of :func:`unroll_dict`: shared underlying
     axes align (with Gather fan-in/fan-out via the group ratios), an axis
     missing on the dst side is consumed in full, an axis missing on the src
-    side broadcasts.  Returns (src_ids, dst_ids) int64 arrays.
+    side broadcasts.  ``pin`` fixes a src axis to one surviving index
+    instead of consuming it (the ``exit_pin``: only the final iteration's
+    loop_exit leaves the loop).  Returns (src_ids, dst_ids) int64 arrays.
     """
     d_sizes = [a.size for a in d_axes]
     nd = 1
     for s in d_sizes:
         nd *= s
-    d_strides = []
-    acc = 1
-    for s in reversed(d_sizes):
-        d_strides.append(acc)
-        acc *= s
-    d_strides.reverse()
+    d_strides = _strides_of(d_sizes)
     dmap = {a.underlying: (a, j) for j, a in enumerate(d_axes)}
 
-    s_strides = []
-    acc = 1
-    for a in reversed(s_axes):
-        s_strides.append(acc)
-        acc *= a.size
-    s_strides.reverse()
+    s_strides = _strides_of([a.size for a in s_axes])
 
     dst = np.arange(nd, dtype=np.int64)
     src_acc = np.zeros(nd, dtype=np.int64)
     for a, s_stride in zip(s_axes, s_strides):
+        if pin is not None and a.underlying in pin:
+            src_acc = src_acc + pin[a.underlying] * s_stride
+            continue
         hit = dmap.get(a.underlying)
         if hit is not None:
             da, j = hit
@@ -474,36 +547,61 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
     Drop ids are allocated leaf-by-leaf in ``lg.leaves()`` order with
     C-order instance coordinates — the exact creation order of
     :func:`unroll_dict` — so the two representations are index-compatible
-    and scheduling tie-breaks agree.  Loop-carried graphs (iteration
-    aliasing) fall back to the dict path and are converted.
+    and scheduling tie-breaks agree.
+
+    Loop-carried graphs are array-native too: a ``loop_entry`` group is
+    instantiated with its loop axis collapsed to size 1 (only iteration
+    0 exists — t>0 instances are pure aliases of the exit at t-1), and
+    every logical edge touching a carried leaf is expanded once over the
+    full per-iteration index space, then rewritten in place — the
+    block-diagonal per-iteration edge maps fall out of the linear index
+    arithmetic:
+
+    * rows *into* an aliased entry at t>0 are dropped (nothing is ever
+      produced into an alias),
+    * rows *out of* an aliased entry at t>0 substitute the exit's drop id
+      at t-1 (axes aligned by underlying construct name),
+    * a ``loop_exit`` consumed outside its loop is pinned to the final
+      iteration (``exit_pin``) instead of consuming the loop range.
+
+    Edge patterns with no closed-form array expansion (incommensurate
+    Gather groups) still fall back to the dict path and are converted.
     """
     from .pgt import KIND_APP, KIND_DATA, CompiledPGT, InstanceGroup
 
     lg.validate()
     leaves = lg.leaves()
-    if any(c.loop_entry or c.loop_exit for c in leaves):
-        return CompiledPGT.from_dict_pgt(unroll_dict(lg))
 
     resolver = AxisResolver(lg)
     axes_of: Dict[str, List[Axis]] = {
         c.name: resolver.leaf_axes(c.name) for c in leaves}
+    carries = _carried_loops(lg, leaves, axes_of)
+
+    full_sizes: Dict[str, List[int]] = {
+        c.name: [a.size for a in axes_of[c.name]] for c in leaves}
+    full_strides: Dict[str, List[int]] = {
+        name: _strides_of(s) for name, s in full_sizes.items()}
 
     groups: List[InstanceGroup] = []
     base_of: Dict[str, int] = {}
     base = 0
     for c in leaves:
-        axes = axes_of[c.name]
-        sizes = tuple(a.size for a in axes)
+        sizes = list(full_sizes[c.name])
+        car = carries.get(c.name)
+        if car is not None and car.pos is not None:
+            # only iteration 0 of a carried entry is materialised
+            sizes[car.pos] = 1
+        sizes_t = tuple(sizes)
         base_of[c.name] = base
         if c.kind is Kind.DATA:
             groups.append(InstanceGroup(
-                name=c.name, base=base, sizes=sizes, kind=KIND_DATA,
+                name=c.name, base=base, sizes=sizes_t, kind=KIND_DATA,
                 app=None, payload_kind=c.payload_kind, execution_time=0.0,
                 data_volume=float(c.data_volume), error_threshold=0.0,
                 params=dict(c.params)))
         else:
             groups.append(InstanceGroup(
-                name=c.name, base=base, sizes=sizes, kind=KIND_APP,
+                name=c.name, base=base, sizes=sizes_t, kind=KIND_APP,
                 app=c.app, payload_kind="memory",
                 execution_time=float(c.execution_time), data_volume=0.0,
                 error_threshold=c.error_threshold, params=dict(c.params)))
@@ -518,16 +616,94 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
         ex[g.base:g.base + g.count] = g.execution_time
         vol[g.base:g.base + g.count] = g.data_volume
 
+    def drop_loop_digit(lin: np.ndarray, name: str, pos: int) -> np.ndarray:
+        """Full-axes linear index -> instantiated index of a carried entry
+        (remove the loop digit; caller guarantees its coordinate is 0)."""
+        st = full_strides[name][pos]
+        sz = full_sizes[name][pos]
+        return (lin // (st * sz)) * st + lin % st
+
     srcs: List[np.ndarray] = []
     dsts: List[np.ndarray] = []
     strs: List[np.ndarray] = []
+    # per-logical-edge expansion emits each (src, dst) pair at most once
+    # (unlike the dict path's coordinate walk, the index arithmetic never
+    # revisits a pair), so the global dedup pass is only needed when two
+    # logical edges could collide (duplicate logical connections) or when
+    # iteration aliasing rewrites ids (conservative)
+    seen_pairs: set = set()
+    need_dedup = bool(carries)
     for e in lg.edges:
+        pair = (e.src, e.dst, e.streaming)
+        need_dedup = need_dedup or pair in seen_pairs
+        seen_pairs.add(pair)
+        s_axes, d_axes = axes_of[e.src], axes_of[e.dst]
+        # exit_pin: a loop_exit consumed outside its loop contributes only
+        # the final iteration (same rule as the dict path)
+        pin: Optional[Dict[str, int]] = None
+        src_c = lg.constructs[e.src]
+        if src_c.kind is Kind.DATA and src_c.loop_exit:
+            loops = [a for a in lg.ancestors(e.src) if a.kind is Kind.LOOP]
+            d_axis_names = {a.underlying for a in d_axes}
+            if loops and loops[-1].name not in d_axis_names:
+                last_t = loops[-1].num_of_iterations - 1
+                for a in s_axes:
+                    if a.underlying == loops[-1].name:
+                        pin = {a.underlying: a.to_index(last_t)}
+                        break
         try:
-            s_ids, d_ids = _expand_edge(
-                axes_of[e.src], axes_of[e.dst],
-                base_of[e.src], base_of[e.dst])
+            s_lin, d_lin = _expand_edge(s_axes, d_axes, 0, 0, pin)
         except _NeedsFallback:
             return CompiledPGT.from_dict_pgt(unroll_dict(lg))
+
+        # destination side: an aliased entry at t>0 receives nothing
+        d_car = carries.get(e.dst)
+        if d_car is not None and d_car.pos is not None:
+            st = full_strides[e.dst][d_car.pos]
+            sz = full_sizes[e.dst][d_car.pos]
+            keep = (d_lin // st) % sz == 0
+            if not keep.all():
+                s_lin, d_lin = s_lin[keep], d_lin[keep]
+            d_ids = base_of[e.dst] + drop_loop_digit(
+                d_lin, e.dst, d_car.pos)
+        else:
+            d_ids = base_of[e.dst] + d_lin
+
+        # source side: entry instances at t>0 alias the exit at t-1
+        s_car = carries.get(e.src)
+        if s_car is not None and s_car.pos is not None:
+            st = full_strides[e.src][s_car.pos]
+            sz = full_sizes[e.src][s_car.pos]
+            t = (s_lin // st) % sz
+            s_ids = base_of[e.src] + drop_loop_digit(
+                s_lin, e.src, s_car.pos)
+            sub = t > 0
+            if sub.any():
+                ent_axes = axes_of[e.src]
+                pos_of = {a.underlying: i for i, a in enumerate(ent_axes)}
+                ent_strides = full_strides[e.src]
+                s_sub = s_lin[sub]
+                ex_lin = np.zeros(s_sub.shape[0], dtype=np.int64)
+                for a, stx in zip(axes_of[s_car.exit],
+                                  full_strides[s_car.exit]):
+                    if a.underlying == s_car.loop:
+                        coord = t[sub] - 1
+                    else:
+                        i = pos_of[a.underlying]
+                        coord = (s_sub // ent_strides[i]) \
+                            % full_sizes[e.src][i]
+                    ex_lin = ex_lin + coord * stx
+                s_ids[sub] = base_of[s_car.exit] + ex_lin
+        else:
+            s_ids = base_of[e.src] + s_lin
+
+        # aliasing can surface degenerate self-edges; the dict path skips
+        # them (src_uid == dst_uid)
+        if s_car is not None or d_car is not None:
+            ok = s_ids != d_ids
+            if not ok.all():
+                s_ids, d_ids = s_ids[ok], d_ids[ok]
+
         srcs.append(s_ids)
         dsts.append(d_ids)
         strs.append(np.full(s_ids.shape[0], e.streaming, dtype=bool))
@@ -536,17 +712,49 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
         esrc = np.concatenate(srcs)
         edst = np.concatenate(dsts)
         estr = np.concatenate(strs)
-        # dedup (parallel logical edges / grouped fan-in overlap), like the
-        # dict path's seen-set; canonical order is (src, dst)
-        key = (esrc * np.int64(n) + edst) * 2 + estr
-        _, first = np.unique(key, return_index=True)
-        esrc, edst, estr = esrc[first], edst[first], estr[first]
+        if need_dedup:
+            # dedup (parallel logical edges / alias rewrites), like the
+            # dict path's seen-set; canonical order is (src, dst)
+            key = (esrc * np.int64(n) + edst) * 2 + estr
+            _, first = np.unique(key, return_index=True)
+            esrc, edst, estr = esrc[first], edst[first], estr[first]
     else:
         esrc = np.empty(0, dtype=np.int64)
         edst = np.empty(0, dtype=np.int64)
         estr = np.empty(0, dtype=bool)
 
-    return CompiledPGT(lg.name, groups, kind, ex, vol, esrc, edst, estr)
+    levels: Optional[np.ndarray] = None
+    if not carries and all(g.count > 0 for g in groups):
+        # Loop-free expansions are acyclic by construction (instance edges
+        # follow the validated logical DAG), and every instance of a leaf
+        # sits at the leaf's own longest-path depth: each instance
+        # receives at least one predecessor instance per logical in-edge
+        # (shared axes align, missing axes broadcast or consume — never an
+        # empty join).  So the Kahn levels collapse to a leaf-graph pass +
+        # one repeat, skipping the O(V+E) validation walk entirely.
+        leaf_lv = {c.name: 0 for c in leaves}
+        indeg = {c.name: 0 for c in leaves}
+        succ: Dict[str, List[str]] = {c.name: [] for c in leaves}
+        for e in lg.edges:
+            succ[e.src].append(e.dst)
+            indeg[e.dst] += 1
+        queue = [name for name, d in indeg.items() if d == 0]
+        while queue:
+            u = queue.pop()
+            for v in succ[u]:
+                if leaf_lv[u] + 1 > leaf_lv[v]:
+                    leaf_lv[v] = leaf_lv[u] + 1
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    queue.append(v)
+        levels = np.repeat(
+            np.fromiter((leaf_lv[g.name] for g in groups), dtype=np.int64,
+                        count=len(groups)),
+            np.fromiter((g.count for g in groups), dtype=np.int64,
+                        count=len(groups)))
+
+    return CompiledPGT(lg.name, groups, kind, ex, vol, esrc, edst, estr,
+                       levels=levels)
 
 
 def unroll(lg: LogicalGraph) -> "CompiledPGT":

@@ -199,9 +199,10 @@ class TestStatusEquivalence:
         assert rep_c.status_counts == rep_o.status_counts == {
             "COMPLETED": 19}
 
-    def test_loop_graph_via_dict_fallback(self):
-        """Loop-carried graphs unroll via the dict path; the compiled
-        engine lifts them with from_dict_pgt and must still agree."""
+    def test_loop_graph_array_native(self):
+        """Loop-carried graphs now unroll straight into CompiledPGT (no
+        from_dict_pgt lift); both engines must agree on every
+        iteration's payload."""
         def lg():
             g = GraphBuilder("loop")
             g.data("init")
@@ -216,7 +217,40 @@ class TestStatusEquivalence:
             lg, {"init": 1})
         assert rep_o.ok and rep_c.ok
         assert st_c == st_o
-        assert val_c["y#4"] == val_o["y#4"] == 2 ** 5
+        for t in range(5):
+            assert val_c[f"y#{t}"] == val_o[f"y#{t}"] == 2 ** (t + 1)
+
+    def test_loop_with_scatter_inside_array_native(self):
+        """Scatter-inside-loop: per-iteration fan-out/fan-in payloads
+        agree across engines, and the loop exit consumed outside the
+        loop carries the final iteration's value."""
+        def lg():
+            g = GraphBuilder("loopsc")
+            g.data("init")
+            g.component("seed", app="identity")
+            with g.loop("lp", 3):
+                g.data("x", loop_entry=True)
+                with g.scatter("sc", 4):
+                    g.component("w", app="eq_double")
+                    g.data("part")
+                g.component("cal", app="eq_sum", error_threshold=0.0)
+                g.data("y", loop_exit=True, carries="x")
+            g.component("fin", app="identity")
+            g.data("res")
+            g.chain("init", "seed", "x", "w", "part", "cal", "y")
+            g.chain("y", "fin", "res")
+            return g.graph()
+        rep_o, st_o, val_o, rep_c, st_c, val_c = run_both(lg, {"init": 1})
+        assert rep_o.ok and rep_c.ok
+        assert st_c == st_o
+        assert val_c == val_o
+        # each iteration: 4 branches double the carried value, the
+        # reducer sums them => x * 8 per iteration
+        want = 1
+        for t in range(3):
+            want *= 8
+            assert val_c[f"y#{t}"] == want
+        assert val_c["res"] == want
 
 
 class TestErrorPropagation:

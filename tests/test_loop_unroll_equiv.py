@@ -1,0 +1,408 @@
+"""Vectorized loop-carried unroll vs the dict oracle (the PR-5 contract).
+
+`unroll()` now compiles loop-carried logical graphs straight into
+``CompiledPGT`` arrays — iteration aliasing (``loop_entry[t]`` is
+``loop_exit[t-1]``) expressed as index substitution on block-diagonal
+per-iteration edge maps, and a ``loop_exit`` consumed outside its loop
+pinned to the final iteration.  ``unroll_dict`` stays the semantic
+oracle: drops (uids, kinds, weights, volumes), edges and partition
+assignment views must agree on every loop topology, including nested
+loops, scatter-inside-loop, multi-carry and exit-consumed-outside.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (CompiledPGT, GraphValidationError, critical_path,
+                        min_time, register_app, simulate_makespan, unroll,
+                        unroll_dict)
+from repro.dsl import GraphBuilder
+
+
+@register_app("lp_double")
+def _lp_double(inputs, outputs, app):
+    v = sum(i.read() for i in inputs)
+    for o in outputs:
+        o.write(v * 2)
+
+
+# ---------------------------------------------------------------------------
+# graph factories
+# ---------------------------------------------------------------------------
+
+
+def simple_loop(iters=5):
+    g = GraphBuilder("lp")
+    g.data("init")
+    g.component("seed", app="identity", time=0.001)
+    with g.loop("lp", iters):
+        g.data("x", loop_entry=True)
+        g.component("inc", app="lp_double", time=0.002)
+        g.data("y", loop_exit=True, carries="x", volume=1e5)
+    g.component("out", app="identity", time=0.001)
+    g.data("res")
+    g.chain("init", "seed", "x", "inc", "y")
+    g.chain("y", "out", "res")
+    return g.graph()
+
+
+def loop_in_scatter(width=4, iters=3):
+    g = GraphBuilder("ls")
+    g.data("init")
+    with g.scatter("sc", width):
+        g.component("seed", app="identity")
+        with g.loop("lp", iters):
+            g.data("x", loop_entry=True)
+            g.component("inc", app="lp_double", time=0.001)
+            g.data("y", loop_exit=True, carries="x", volume=2e4)
+        g.component("post", app="identity")
+        g.data("d")
+    g.chain("init", "seed", "x", "inc", "y")
+    g.chain("y", "post", "d")
+    return g.graph()
+
+
+def scatter_in_loop(iters=4, width=3):
+    g = GraphBuilder("sl")
+    g.data("init")
+    g.component("seed", app="identity")
+    with g.loop("lp", iters):
+        g.data("x", loop_entry=True)
+        with g.scatter("sc", width):
+            g.component("work", app="identity", time=0.002)
+            g.data("part", volume=1e4)
+        g.component("cal", app="identity", time=0.004)
+        g.data("y", loop_exit=True, carries="x")
+    g.component("fin", app="identity")
+    g.data("res")
+    g.chain("init", "seed", "x", "work", "part", "cal", "y")
+    g.chain("y", "fin", "res")
+    return g.graph()
+
+
+def nested_loops(outer=3, inner=2):
+    g = GraphBuilder("nl")
+    g.data("init")
+    g.component("seed", app="identity")
+    with g.loop("lo", outer):
+        g.data("xo", loop_entry=True)
+        g.component("pre", app="identity", time=0.001)
+        with g.loop("li", inner):
+            g.data("xi", loop_entry=True)
+            g.component("inc", app="lp_double", time=0.001)
+            g.data("yi", loop_exit=True, carries="xi")
+        g.component("mid", app="identity")
+        g.data("yo", loop_exit=True, carries="xo", volume=5e3)
+    g.chain("init", "seed", "xo", "pre", "xi", "inc", "yi")
+    g.chain("yi", "mid", "yo")
+    return g.graph()
+
+
+def multi_carry(iters=3):
+    g = GraphBuilder("mc")
+    g.data("a0")
+    g.data("b0")
+    g.component("s1", app="identity")
+    g.component("s2", app="identity")
+    with g.loop("lp", iters):
+        g.data("xa", loop_entry=True)
+        g.data("xb", loop_entry=True)
+        g.component("f", app="identity", time=0.001)
+        g.data("ya", loop_exit=True, carries="xa")
+        g.component("h", app="identity", time=0.002)
+        g.data("yb", loop_exit=True, carries="xb", volume=7e3)
+    g.chain("a0", "s1", "xa")
+    g.chain("b0", "s2", "xb")
+    g.connect("xa", "f")
+    g.connect("xb", "f")
+    g.connect("f", "ya")
+    g.connect("xb", "h")
+    g.connect("h", "yb")
+    return g.graph()
+
+
+def exit_to_gather(width=8, iters=3, fanin=4):
+    """Loop nested in a scatter; the exit feeds a Gather OUTSIDE the
+    loop — the exit_pin case the vectorized path surfaced (the gather
+    must fan in over the *scatter* axis and see only final-iteration
+    exits, not aggregate over iterations)."""
+    g = GraphBuilder("eg")
+    g.data("init")
+    with g.scatter("sc", width):
+        g.component("seed", app="identity")
+        with g.loop("lp", iters):
+            g.data("x", loop_entry=True)
+            g.component("inc", app="identity", time=0.001)
+            g.data("y", loop_exit=True, carries="x", volume=3e4)
+    with g.gather("ga", fanin):
+        g.component("red", app="identity", time=0.002)
+    g.data("out")
+    g.chain("init", "seed", "x", "inc", "y")
+    g.chain("y", "red", "out")
+    return g.graph()
+
+
+FACTORIES = [simple_loop, loop_in_scatter, scatter_in_loop, nested_loops,
+             multi_carry, exit_to_gather]
+
+
+# ---------------------------------------------------------------------------
+# oracle comparison
+# ---------------------------------------------------------------------------
+
+
+def assert_equivalent(lg):
+    csr, dic = unroll(lg), unroll_dict(lg)
+    assert isinstance(csr, CompiledPGT)
+    # array-native: group-derived uids, not the from_dict_pgt lift
+    assert csr._uids is None, "loop graph took the dict fallback"
+    assert len(csr) == len(dic)
+    assert sorted(csr.drops) == sorted(dic.drops)
+    assert sorted(tuple(e) for e in csr.edges) == \
+        sorted(tuple(e) for e in dic.edges)
+    for uid, spec in dic.drops.items():
+        view = csr.drops[uid]
+        assert view.kind == spec.kind
+        assert view.construct == spec.construct
+        assert view.weight() == spec.weight()
+        assert view.data_volume == spec.data_volume
+    # valid topological order on both representations
+    pos = {u: i for i, u in enumerate(csr.topological_order())}
+    for s, d, _ in csr.edges:
+        assert pos[s] < pos[d]
+    dic.topological_order()
+    return csr, dic
+
+
+@pytest.mark.parametrize("factory", FACTORIES,
+                         ids=[f.__name__ for f in FACTORIES])
+def test_loop_topologies_match_oracle(factory):
+    assert_equivalent(factory())
+
+
+@pytest.mark.parametrize("factory", [simple_loop, scatter_in_loop,
+                                     multi_carry])
+def test_partition_arrays_match_oracle(factory):
+    """Copying the oracle's partition assignment into the CompiledPGT by
+    uid lands in the partition array, and the canonical scheduler agrees
+    bit-for-bit on the resulting makespan."""
+    lg = factory()
+    csr, dic = unroll(lg), unroll_dict(lg)
+    min_time(dic, dop=3)
+    for uid, spec in dic.drops.items():
+        csr.drops[uid].partition = spec.partition
+    want = np.array([dic.drops[csr.uid_of(i)].partition
+                     for i in range(len(csr))])
+    assert np.array_equal(csr.partition, want)
+    assert simulate_makespan(csr, dop=3) == simulate_makespan(dic, dop=3)
+    assert critical_path(csr) == critical_path(dic)
+
+
+def test_iteration_aliasing_block_structure():
+    """Only iteration 0 of a carried entry exists; iteration t>0 edges
+    substitute the exit at t-1 (the block-diagonal shift)."""
+    csr = unroll(simple_loop(iters=5))
+    xs = [u for u in csr.drops if u.split("#")[0] == "x"]
+    ys = sorted(u for u in csr.drops if u.split("#")[0] == "y")
+    assert xs == ["x#0"]
+    assert ys == [f"y#{t}" for t in range(5)]
+    # inc#t consumes y#(t-1) for t>0 and x#0 at t=0
+    assert csr.predecessors("inc#0") == ["x#0"]
+    for t in range(1, 5):
+        assert csr.predecessors(f"inc#{t}") == [f"y#{t-1}"]
+    # only the final iteration's exit leaves the loop
+    assert set(csr.predecessors("out")) == {"y#4"}
+
+
+def test_exit_pin_gather_outside_loop():
+    """The bugfix case: a gather outside the loop fans in over the
+    scatter axis and consumes only final-iteration exits."""
+    width, iters, fanin = 8, 3, 4
+    lg = exit_to_gather(width, iters, fanin)
+    csr, dic = assert_equivalent(lg)
+    reds = sorted(u for u in csr.drops if u.split("#")[0] == "red")
+    # fan-in over the SCATTER axis: width/fanin gather instances, not
+    # one per (scatter, iteration-group) pair
+    assert len(reds) == width // fanin
+    for q, red in enumerate(reds):
+        preds = sorted(csr.predecessors(red))
+        want = sorted(f"y#{k}.{iters-1}"
+                      for k in range(q * fanin, (q + 1) * fanin))
+        assert preds == want, "gather must see final-iteration exits only"
+        assert preds == sorted(dic.predecessors(red))
+
+
+def test_compiled_execution_of_loop_graph_end_to_end():
+    """Tie-in with the engine: the compiled path runs the array-native
+    loop PGT directly (no dict lift at deploy)."""
+    from repro.core import Pipeline
+    with Pipeline(num_nodes=2, execution="compiled") as p:
+        p.translate(simple_loop(iters=6))
+        assert isinstance(p.pgt, CompiledPGT) and p.pgt._uids is None
+        p.deploy()
+        rep = p.execute(inputs={"init": 1})
+        assert rep.ok, rep.errors
+        assert p.session.read("y#5") == 2 ** 6
+        assert p.session.read("res") == 2 ** 6
+
+
+def test_graph_io_roundtrip_loop_pgt(tmp_path):
+    """Serialisation round-trips the array-native loop PGT — including
+    the array fast path of save_pgt — with partitions, nodes and params
+    intact, and identical canonical makespans."""
+    from repro.core import load_pgt, save_pgt
+    from repro.core.graph_io import _iter_drop_records, _spec_to_json
+    pgt = unroll(scatter_in_loop())
+    min_time(pgt, dop=3)
+    pgt.drops["y#1"].node = "n7"
+    pgt.drops["y#1"].params["flag"] = True
+    # the array fast path emits exactly what the DropView walk would
+    assert list(_iter_drop_records(pgt)) == \
+        [_spec_to_json(s) for s in pgt.drops.values()]
+    path = str(tmp_path / "loop.jsonl.gz")
+    save_pgt(pgt, path)
+    back = load_pgt(path)
+    assert sorted(back.drops) == sorted(pgt.drops)
+    assert sorted(tuple(e) for e in back.edges) == \
+        sorted(tuple(e) for e in pgt.edges)
+    assert back.drops["y#1"].node == "n7"
+    assert back.drops["y#1"].params["flag"] is True
+    for uid in pgt.drops:
+        assert back.drops[uid].partition == pgt.drops[uid].partition
+    assert simulate_makespan(back, dop=3) == simulate_makespan(pgt, dop=3)
+
+
+# ---------------------------------------------------------------------------
+# validation hardening (shared by both paths)
+# ---------------------------------------------------------------------------
+
+
+def _chained_carry_lg():
+    g = GraphBuilder("cc")
+    g.data("init")
+    g.component("seed", app="identity")
+    with g.loop("lp", 3):
+        g.data("x", loop_entry=True, loop_exit=True, carries="x")
+        g.component("inc", app="identity")
+    g.chain("init", "seed", "x", "inc")
+    return g.graph()
+
+
+def _dup_carrier_lg():
+    g = GraphBuilder("dc")
+    g.data("init")
+    g.component("seed", app="identity")
+    with g.loop("lp", 3):
+        g.data("x", loop_entry=True)
+        g.component("a", app="identity")
+        g.data("y1", loop_exit=True, carries="x")
+        g.component("b", app="identity")
+        g.data("y2", loop_exit=True, carries="x")
+    g.chain("init", "seed", "x", "a", "y1")
+    g.chain("x", "b", "y2")
+    return g.graph()
+
+
+def _misaligned_carry_lg():
+    g = GraphBuilder("ma")
+    g.data("init")
+    g.component("seed", app="identity")
+    with g.loop("lp", 3):
+        g.data("x", loop_entry=True)
+        with g.scatter("sc", 4):
+            g.component("w", app="identity")
+            g.data("y", loop_exit=True, carries="x")
+    g.chain("init", "seed", "x", "w", "y")
+    return g.graph()
+
+
+@pytest.mark.parametrize("factory,match", [
+    (_chained_carry_lg, "chained loop carry|carried by"),
+    (_dup_carrier_lg, "carried by both"),
+    (_misaligned_carry_lg, "does not align"),
+])
+def test_ill_formed_carries_raise_on_both_paths(factory, match):
+    lg = factory()
+    with pytest.raises(GraphValidationError, match=match):
+        unroll(lg)
+    with pytest.raises(GraphValidationError, match=match):
+        unroll_dict(lg)
+
+
+# ---------------------------------------------------------------------------
+# randomized tier (hypothesis when available, seeded spot checks always)
+# ---------------------------------------------------------------------------
+
+
+def random_loop_lg(seed: int):
+    """Random loop-carried LG: optional enclosing scatter, optional
+    scatter inside the loop, 1-2 carried pairs, optional outside
+    consumer of the exit."""
+    rng = random.Random(seed)
+    iters = rng.randint(1, 5)
+    outer_w = rng.choice([0, 2, 3])
+    inner_w = rng.choice([0, 2, 4])
+    two_carries = rng.random() < 0.4
+    outside = rng.random() < 0.6
+
+    g = GraphBuilder(f"rl{seed}")
+    g.data("init", volume=rng.uniform(0, 1e5))
+
+    def body():
+        g.component("seed", app="identity", time=rng.uniform(0, 0.01))
+        with g.loop("lp", iters):
+            g.data("x", loop_entry=True)
+            if inner_w:
+                with g.scatter("si", inner_w):
+                    g.component("w", app="identity",
+                                time=rng.uniform(0, 0.01))
+                    g.data("part", volume=rng.uniform(0, 1e5))
+                g.component("cal", app="identity")
+            else:
+                g.component("cal", app="identity",
+                            time=rng.uniform(0, 0.01))
+            g.data("y", loop_exit=True, carries="x",
+                   volume=rng.uniform(0, 1e5))
+            if two_carries:
+                g.data("u", loop_entry=True)
+                g.component("g2", app="identity")
+                g.data("v", loop_exit=True, carries="u")
+        if outside:
+            g.component("post", app="identity")
+            g.data("done")
+
+    if outer_w:
+        with g.scatter("so", outer_w):
+            body()
+    else:
+        body()
+
+    g.connect("init", "seed")
+    g.connect("seed", "x")
+    if inner_w:
+        g.chain("x", "w", "part", "cal", "y")
+    else:
+        g.chain("x", "cal", "y")
+    if two_carries:
+        g.connect("seed", "u")
+        g.chain("u", "g2", "v")
+    if outside:
+        g.chain("y", "post", "done")
+    return g.graph()
+
+
+@pytest.mark.parametrize("seed", range(16))
+def test_random_loop_graphs_match_oracle(seed):
+    assert_equivalent(random_loop_lg(seed))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    pass
+else:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_hypothesis_loop_graphs_match_oracle(seed):
+        assert_equivalent(random_loop_lg(seed))

@@ -212,11 +212,13 @@ def test_corner_turn_equivalence(outer, inner):
 
 
 @pytest.mark.parametrize("iters", [1, 3, 5])
-def test_loop_fallback_equivalence(iters):
-    """Loop-carried graphs take the dict fallback but yield a CompiledPGT."""
+def test_loop_array_native_equivalence(iters):
+    """Loop-carried graphs compile straight to CompiledPGT (see
+    tests/test_loop_unroll_equiv.py for the full loop tier)."""
     lg = loop_lg(iters)
     csr, dic = unroll(lg), unroll_dict(lg)
     assert isinstance(csr, CompiledPGT)
+    assert csr._uids is None        # no from_dict_pgt lift
     assert_same_graph(csr, dic)
     # iteration aliasing: one x entry, `iters` y exits
     assert sum(1 for u in csr.drops if u.split("#")[0] == "y") == iters
