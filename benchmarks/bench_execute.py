@@ -38,6 +38,7 @@ from __future__ import annotations
 import argparse
 import gc
 import json
+import resource
 import statistics
 import time
 from pathlib import Path
@@ -47,6 +48,15 @@ import numpy as np
 
 from repro.core import FailureScript, Pipeline, ResilienceConfig
 from repro.dsl import GraphBuilder
+
+
+def peak_rss_mb() -> float:
+    """Process peak RSS in MB (``ru_maxrss`` is KB on Linux).
+
+    A cumulative high-water mark: per-stage readings record the peak
+    observed *up to the end of* that stage (report-only, not gated)."""
+    return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                 / 1024.0, 1)
 
 # drops per unit width in make_lg: src + width*(w, d, w2, d2) + r + out
 DROPS_PER_WIDTH = 4
@@ -81,10 +91,13 @@ def run_tier(target_drops: int, execution: str,
     with Pipeline(num_nodes=4, workers_per_node=8, dop=64,
                   execution=execution) as p:
         p.translate(lg)            # same array translate for both modes
+        rss_translate = peak_rss_mb()
         t0 = time.monotonic()
         p.deploy()
+        rss_deploy = peak_rss_mb()
         rep = p.execute(timeout=timeout, inputs={"src": 1})
         wall = time.monotonic() - t0
+        rss_execute = peak_rss_mb()
         assert rep.ok, (rep.state, rep.errors[:3])
         n = sum(rep.status_counts.values())
     # per-stage walls: translate / deploy (mapping included) / execute —
@@ -103,6 +116,10 @@ def run_tier(target_drops: int, execution: str,
         "largest_stage": max(stages, key=stages.get),  # type: ignore[arg-type]
         "drops_per_s": round(n / wall, 1),
         "overhead_us_per_drop": round(rep.overhead_per_drop_us(), 3),
+        # cumulative peak-RSS high-water after each stage (report-only)
+        "rss_mb_translate": rss_translate,
+        "rss_mb_deploy": rss_deploy,
+        "rss_mb_execute": rss_execute,
     }
 
 
@@ -176,6 +193,7 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
         "recovered_drops": recovered,
         "recovery_frac_of_execute": round(recovery_s / max(clean_s, 1e-9),
                                           4),
+        "rss_mb_peak": peak_rss_mb(),
     }
 
 

@@ -10,11 +10,13 @@ by side.
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
-from repro.core import (critical_path, min_res, min_time, partition_stats,
-                        simulate_makespan, unroll, unroll_dict)
+from repro.core import (NodeInfo, critical_path, map_partitions, min_res,
+                        min_time, partition_stats, simulate_makespan,
+                        unroll, unroll_dict)
 from repro.dsl import GraphBuilder
 
 
@@ -72,9 +74,39 @@ def run(dop: int = 8) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def verbose_partition(num_nodes: int = 4, dop: int = 8) -> None:
+    """Print the mapper's per-level uncoarsening stats (cut / imbalance
+    before and after KL refinement at each hierarchy level) for the
+    imaging-like graph — the substrate's multilevel path made visible."""
+    pgt = unroll(imaging_like_lg())
+    min_time(pgt, dop=dop)
+    hier = getattr(pgt, "_partition_hierarchy", None)
+    nlv = hier.num_levels if hier is not None else 0
+    print(f"# recorded hierarchy: {nlv} level(s), "
+          f"{int(pgt.partition.max()) + 1} partitions kept")
+    stats: List[Dict[str, float]] = []
+    nodes = [NodeInfo(f"node{i}") for i in range(num_nodes)]
+    map_partitions(pgt, nodes, level_stats=stats)
+    print("# level,vertices,edges,cut_before,cut_after,"
+          "imbalance_before,imbalance_after")
+    for s in stats:
+        print(f"level_{int(s['level'])},{int(s['vertices'])},"
+              f"{int(s['edges'])},{s['cut_before']:.1f},"
+              f"{s['cut_after']:.1f},{s['imbalance_before']:.3f},"
+              f"{s['imbalance_after']:.3f}")
+
+
 def main() -> None:
-    for name, val, extra in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dop", type=int, default=8)
+    ap.add_argument("--verbose-partition", action="store_true",
+                    help="also print the mapper's per-level cut/imbalance "
+                         "stats from the shared partition hierarchy")
+    args = ap.parse_args()
+    for name, val, extra in run(dop=args.dop):
         print(f"{name},{val:.2f},{extra}")
+    if args.verbose_partition:
+        verbose_partition(dop=args.dop)
 
 
 if __name__ == "__main__":

@@ -20,9 +20,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import resource
 import time
 from pathlib import Path
 from typing import List, Tuple
+
+
+def peak_rss_mb() -> float:
+    """Cumulative peak RSS in MB (``ru_maxrss`` is KB on Linux); stamped
+    after each stage of the big tiers (report-only, never gated)."""
+    return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                 / 1024.0, 1)
 
 from repro.core import min_time, unroll, unroll_dict
 from repro.core.graph_io import load_pgt, save_pgt
@@ -131,6 +139,7 @@ def _million_row(target_drops: int = 1_000_000) -> List[Row]:
     t0 = time.monotonic()
     pgt = unroll(lg)
     t_unroll = time.monotonic() - t0
+    rss_unroll = peak_rss_mb()
     n = len(pgt)
     t1 = time.monotonic()
     res = min_time(pgt, dop=8)
@@ -138,7 +147,8 @@ def _million_row(target_drops: int = 1_000_000) -> List[Row]:
     return [(f"translate_csr_drops_per_s[n={n}]", n / t_total,
              f"unroll_s={t_unroll:.3f};partition_s={time.monotonic()-t1:.3f};"
              f"partitions={res.num_partitions};"
-             f"makespan={res.makespan:.4f}")]
+             f"makespan={res.makespan:.4f};"
+             f"rss_mb_unroll={rss_unroll};rss_mb_partition={peak_rss_mb()}")]
 
 
 def _loop_rows(iters: int = 100, drops_per_iter: int = 10_000,
@@ -219,11 +229,13 @@ def smoke(width: int) -> List[Row]:
     lg = make_lg(width)
     t0 = time.monotonic()
     pgt = unroll(lg)
+    rss_unroll = peak_rss_mb()
     res = min_time(pgt, dop=8)
     t = time.monotonic() - t0
     n = len(pgt)
     return [(f"translate_csr_drops_per_s[w={width};n={n}]", n / t,
-             f"total_s={t:.3f};partitions={res.num_partitions}")]
+             f"total_s={t:.3f};partitions={res.num_partitions};"
+             f"rss_mb_unroll={rss_unroll};rss_mb_partition={peak_rss_mb()}")]
 
 
 def main() -> None:

@@ -50,29 +50,51 @@ REPORT_PATH = RESULTS_DIR / "bench_regression.json"
 DEFAULT_TOLERANCE = 0.30
 
 
+def _warn(msg: str) -> None:
+    print(f"check_bench: warning: {msg}", file=sys.stderr)
+
+
 def execute_metrics(path: Path) -> Dict[str, float]:
-    """``execute:<mode>:<tier>:drops_per_s`` from a bench_execute JSON."""
+    """``execute:<mode>:<tier>:drops_per_s`` from a bench_execute JSON.
+
+    Malformed rows (missing ``mode``/``tier``, non-numeric throughput)
+    are warned about and skipped — a truncated or hand-edited results
+    file must not crash the gate."""
     if not path.exists():
         return {}
     with open(path) as fh:
         rows = json.load(fh).get("rows", [])
     out: Dict[str, float] = {}
-    for r in rows:
-        if "drops_per_s" in r:
+    for i, r in enumerate(rows):
+        if "drops_per_s" not in r:
+            continue
+        try:
             out[f"execute:{r['mode']}:{r['tier']}:drops_per_s"] = \
                 float(r["drops_per_s"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
     return out
 
 
 def translate_metrics(path: Path) -> Dict[str, float]:
     """``translate:<metric>`` throughput rows from a bench_translate
-    JSON (higher-is-better ``drops_per_s`` metrics only)."""
+    JSON (higher-is-better ``drops_per_s`` metrics only).
+
+    Malformed rows (missing ``value``, non-numeric value) are warned
+    about and skipped rather than crashing the gate."""
     if not path.exists():
         return {}
     with open(path) as fh:
         rows = json.load(fh).get("rows", [])
-    return {f"translate:{r['metric']}": float(r["value"])
-            for r in rows if "drops_per_s" in r.get("metric", "")}
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if "drops_per_s" not in r.get("metric", ""):
+            continue
+        try:
+            out[f"translate:{r['metric']}"] = float(r["value"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
 
 
 def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
@@ -161,6 +183,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     if tolerance is None:
         tolerance = float(base_doc.get("tolerance", DEFAULT_TOLERANCE))
     report = compare(current, base_doc.get("metrics", {}), tolerance)
+    for row in report["checked"]:                     # type: ignore[index]
+        if row["status"] == "missing":
+            _warn(f"baseline floor {row['metric']!r} has no matching "
+                  "tier in current results; skipping it")
 
     args.report.parent.mkdir(parents=True, exist_ok=True)
     with open(args.report, "w") as fh:

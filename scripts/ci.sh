@@ -28,6 +28,9 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
         --loop-drops-per-iter 500
     echo "== execute smoke bench (10k drops, objects vs compiled) =="
     python benchmarks/bench_execute.py --tiers 10000
+    echo "== execute 10M-drop tier (compiled only; substrate capacity) =="
+    python benchmarks/bench_execute.py --tiers 10000000 \
+        --max-object-drops 100000
     echo "== recovery smoke bench (10k drops, kill 1 of 8 nodes at 50%) =="
     python benchmarks/bench_execute.py --tier recovery --tiers 10000
     echo "== bench-regression gate (results vs results/baseline.json) =="

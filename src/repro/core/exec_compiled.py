@@ -460,15 +460,17 @@ def execute_frontier(session: CompiledSession,
     # readiness counters, derived from current state (fresh start or resume)
     src_state = state[pgt.edge_src]
     terminal_edges = src_state != ST_INIT
+    # int32 counters throughout (in_degrees is int32): at the 10M tier
+    # the three per-drop counter arrays stay at 40MB each, not 80MB
     if terminal_edges.any():
         pending = in_deg - np.bincount(
-            pgt.edge_dst[terminal_edges], minlength=n)
+            pgt.edge_dst[terminal_edges], minlength=n).astype(np.int32)
         err_preds = np.bincount(
             pgt.edge_dst[src_state == ST_ERROR],
-            minlength=n).astype(np.int64)
+            minlength=n).astype(np.int32)
     else:
         pending = in_deg.copy()
-        err_preds = np.zeros(n, dtype=np.int64)
+        err_preds = np.zeros(n, dtype=np.int32)
 
     frontier = np.flatnonzero((pending == 0) & (state == ST_INIT))
     remaining = int((state == ST_INIT).sum())

@@ -9,20 +9,30 @@ clusters to m compute nodes becomes a straightforward round-robin assignment."
 Two implementations share the objective ``alpha * imbalance + beta * cut``:
 
 * ``mapping="csr"`` (default) — array-native multilevel scheme over the
-  partition graph held as flat CSR-style arrays
-  (:meth:`~repro.core.pgt.CompiledPGT.partition_graph_arrays`):
+  partition hierarchy ``min_time`` records while merging
+  (:class:`~repro.core.substrate.PartitionHierarchy`; the flat
+  :meth:`~repro.core.pgt.CompiledPGT.partition_graph_arrays` extraction
+  is the fallback when no fresh hierarchy exists):
 
-  1. **Coarsen**: rounds of vectorized *heavy-edge matching* — every
-     vertex picks its heaviest incident edge (ties broken toward the
-     lighter partner), mutual picks contract, the coarse graph is
-     re-aggregated with ``np.unique``/``np.bincount`` — until <= m
-     super-vertices or the positive-weight edges run out.
-  2. **Assign**: longest-processing-time greedy of the coarse groups onto
-     nodes.  Loads carry a drop-count epsilon, so *zero-communication /
-     zero-weight* components (where every tie-break used to collapse the
-     whole graph onto node0) spread ~1/m per node by count.
-  3. **Refine**: vectorized Kernighan–Lin-style best-move greedy, driven
-     directly from the partition-graph edge arrays.
+  1. **Coarsen**: start from the recorded merge hierarchy — translate
+     already coarsened this graph, so the mapper re-uses its levels —
+     and extend it past the coarsest recorded level with rounds of
+     vectorized *heavy-edge matching* (every vertex picks its heaviest
+     incident edge, ties broken toward the lighter partner; mutual picks
+     contract; re-aggregation via ``np.unique``/``np.bincount``) until
+     <= m super-vertices or the positive-weight edges run out.
+  2. **Assign**: longest-processing-time greedy of the coarsest level
+     onto nodes.  Loads carry a drop-count epsilon, so
+     *zero-communication / zero-weight* components (where every
+     tie-break used to collapse the whole graph onto node0) spread ~1/m
+     per node by count.
+  3. **Uncoarsen + refine**: project the assignment back down the
+     chain one level at a time, running the vectorized Kernighan–Lin
+     best-move greedy at *every* level (``refine_levels="all"``) —
+     coarse moves relocate whole clusters that single fine-level moves
+     cannot, which is where cut quality is won on communication-heavy
+     graphs (``refine_levels="finest"`` restores the old single-level
+     behaviour).
 
 * ``mapping="dict"`` — the original dict-of-dicts implementation, kept as
   the semantic oracle (``tests/test_mapping_balance.py`` checks the CSR
@@ -37,15 +47,16 @@ from __future__ import annotations
 import heapq
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .pgt import KIND_DATA, CompiledPGT
+from .substrate import HierarchyLevel
 from .unroll import PhysicalGraphTemplate
 
 # drop-count tie-break scale: small enough never to outweigh a real load
-# difference, large enough to order pure-count ties (see _effective_loads)
+# difference, large enough to order pure-count ties (see _chain_loads)
 _COUNT_EPS = 1e-9
 
 
@@ -171,41 +182,89 @@ def _validate(nodes: Sequence[NodeInfo],
 def map_partitions(pgt, nodes: Sequence[NodeInfo],
                    alpha: float = 1.0, beta: float = 1e-9,
                    refine_iters: int = 200,
-                   mapping: str = "csr") -> Dict[int, str]:
+                   mapping: str = "csr",
+                   refine_levels: str = "all",
+                   level_stats: Optional[List[Dict[str, float]]] = None
+                   ) -> Dict[int, str]:
     """Assign each PGT partition to a node; also stamps ``spec.node``.
 
     ``mapping="csr"`` (default) runs the array-native multilevel mapper;
     ``mapping="dict"`` runs the original dict implementation (the
     semantic oracle, fine to ~10^4 partitions).
+
+    ``refine_levels`` controls the uncoarsening pass of the CSR path:
+    ``"all"`` (default) runs KL refinement at every level of the
+    coarsening chain while projecting the assignment down;
+    ``"finest"`` refines only at the finest level (the pre-substrate
+    behaviour).  When ``level_stats`` is a list it receives one dict per
+    refined level — cut and imbalance before/after refinement — for
+    diagnostics (``bench_partition.py --verbose-partition``).
     """
     live = _validate(nodes, refine_iters)
     if mapping == "dict":
         return _map_partitions_dict(pgt, live, alpha, beta, refine_iters)
     if mapping != "csr":
         raise ValueError(f"unknown mapping {mapping!r}")
+    if refine_levels not in ("all", "finest"):
+        raise ValueError(f"unknown refine_levels {refine_levels!r}")
     m = len(live)
-    g = PartitionArrays.from_pgt(pgt)
-    npart = int(g.ids.size)
+    # min_time records its merge hierarchy (core/substrate.py): the
+    # finest partition graph AND its coarser levels arrive pre-built.
+    # Fall back to the flat extraction when the hierarchy is absent
+    # (dict PGTs, min_res, manual labels) or stale (partition mutated
+    # since — annealing, DropView writes)
+    hier = getattr(pgt, "_partition_hierarchy", None)
+    if hier is not None and hier.matches(pgt):
+        levels = list(hier.levels)
+        ids = np.arange(levels[0].num_vertices, dtype=np.int64)
+    else:
+        g = PartitionArrays.from_pgt(pgt)
+        levels = [HierarchyLevel(g.load, g.mem, g.count, g.eu, g.ev, g.ew)]
+        ids = g.ids
+    npart = int(ids.size)
     if npart == 0:
         stamp_nodes(pgt, {})
         return {}
-    lw = _effective_loads(g.load + 1e-6 * g.mem, g.count)
-    # 1. coarsen: vectorized heavy-edge matching until <= m super-vertices
-    group = _coarsen_hem(lw, g.eu, g.ev, g.ew, m)
-    ngroups = int(group.max()) + 1
-    gload = np.bincount(group, weights=lw, minlength=ngroups)
-    # 2. initial assignment: LPT greedy of coarse groups onto nodes
-    a = _lpt_assign(gload, m)[group]
-    # 3. KL-style refinement straight off the partition-graph edge arrays
-    _refine_arrays(lw, a, m, g.eu, g.ev, g.ew, alpha, beta, refine_iters)
+    lw = _chain_loads(levels)
+    edges = [(l.eu, l.ev, l.ew) for l in levels]
+    parents = [l.parent for l in levels[:-1]]
+    # 1. coarsen: extend the recorded chain past its coarsest level with
+    #    vectorized heavy-edge matching until <= m super-vertices
+    for parent, clw, ceu, cev, cew in _hem_levels(lw[-1], *edges[-1], m):
+        parents.append(parent)
+        lw.append(clw)
+        edges.append((ceu, cev, cew))
+    # 2. initial assignment: LPT greedy of the coarsest level onto nodes
+    a = _lpt_assign(lw[-1], m)
+    # 3. uncoarsen: project down one level at a time, KL-refining off
+    #    each level's own edge arrays (coarse moves relocate whole
+    #    clusters that single finest-level moves cannot reach)
+    top = len(lw) - 1
+    for i in range(top, -1, -1):
+        if i < top:
+            a = a[parents[i]]
+        if refine_levels == "all" or i == 0:
+            eu, ev, ew = edges[i]
+            before = (_level_stat(lw[i], a, m, eu, ev, ew)
+                      if level_stats is not None else None)
+            _refine_arrays(lw[i], a, m, eu, ev, ew, alpha, beta,
+                           refine_iters)
+            if before is not None:
+                after = _level_stat(lw[i], a, m, eu, ev, ew)
+                level_stats.append({
+                    "level": i, "vertices": int(lw[i].size),
+                    "edges": int(eu.size),
+                    "cut_before": before[0], "cut_after": after[0],
+                    "imbalance_before": before[1],
+                    "imbalance_after": after[1]})
     assign = {int(p): live[int(j)].name
-              for p, j in zip(g.ids.tolist(), a.tolist())}
+              for p, j in zip(ids.tolist(), a.tolist())}
     stamp_nodes(pgt, assign)
     return assign
 
 
-def _effective_loads(load: np.ndarray, count: np.ndarray) -> np.ndarray:
-    """Load vector with a drop-count tie-break.
+def _chain_loads(levels: Sequence[HierarchyLevel]) -> List[np.ndarray]:
+    """Per-level effective load vectors with a drop-count tie-break.
 
     A uniform zero-weight graph has every partition load 0; every greedy
     decision then ties and historically resolved to node0 — the whole
@@ -213,17 +272,36 @@ def _effective_loads(load: np.ndarray, count: np.ndarray) -> np.ndarray:
     relative to the mean positive load* (or the count itself when no
     load exists) makes balance-by-count the tie-break without measurably
     distorting weighted graphs.
+
+    The coefficients are fixed at the finest level; the loads are then
+    linear in ``(load, mem, count)``, so projecting a level's loads
+    through its parent map reproduces the coarser level's exactly —
+    refinement sees consistent balance bookkeeping at every level.
     """
-    total = float(load.sum())
+    base = levels[0]
+    load0 = base.load + 1e-6 * base.mem
+    total = float(load0.sum())
     if total <= 0.0:
-        return count.astype(np.float64)
-    eps = (total / max(float(count.sum()), 1.0)) * _COUNT_EPS
-    return load + eps * count
+        return [l.count.astype(np.float64) for l in levels]
+    eps = (total / max(float(base.count.sum()), 1.0)) * _COUNT_EPS
+    return [(l.load + 1e-6 * l.mem) + eps * l.count for l in levels]
 
 
-def _coarsen_hem(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
-                 ew: np.ndarray, m: int) -> np.ndarray:
-    """Vectorized heavy-edge-matching coarsening.
+def _level_stat(w: np.ndarray, a: np.ndarray, m: int, eu: np.ndarray,
+                ev: np.ndarray, ew: np.ndarray) -> Tuple[float, float]:
+    """(cut volume, load imbalance) of assignment ``a`` on one level."""
+    cut = float(ew[a[eu] != a[ev]].sum()) if ew.size else 0.0
+    loads = np.zeros(m, dtype=np.float64)
+    np.add.at(loads, a, w)
+    imb = float(loads.max() / max(float(loads.mean()), 1e-12))
+    return cut, imb
+
+
+def _hem_levels(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
+                ew: np.ndarray, m: int
+                ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]]:
+    """Vectorized heavy-edge-matching coarsening, one chain level per round.
 
     Rounds of parallel matching: every vertex nominates the neighbour
     across its heaviest positive edge (ties toward the lighter partner —
@@ -238,19 +316,23 @@ def _coarsen_hem(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
     one giant super-vertex that no amount of single-move refinement can
     re-spread — the multilevel analogue of the node0 pile-up.
 
-    Returns the dense group label (0..G-1) of every input vertex.
-    Zero-weight edges never match — disconnected / zero-communication
-    components are left to the load-aware LPT assignment.
+    Returns one ``(parent, load, eu, ev, ew)`` record per round —
+    ``parent`` maps the previous level's vertices to the new one's, the
+    rest is the new level's graph — ready to splice onto the recorded
+    hierarchy chain.  Zero-weight edges never match — disconnected /
+    zero-communication components are left to the load-aware LPT
+    assignment (and contribute nothing to any cut, so dropping them from
+    the per-level refinement edges is exact).
     """
-    npart = lw.size
-    label = np.arange(npart, dtype=np.int64)
+    out: List[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                    np.ndarray]] = []
     pos = ew > 0.0
     ceu = eu[pos].astype(np.int64, copy=True)
     cev = ev[pos].astype(np.int64, copy=True)
     cew = ew[pos].astype(np.float64, copy=True)
     cload = lw.astype(np.float64, copy=True)
     cap = float(cload.sum()) / max(m, 1)
-    nv = npart
+    nv = int(lw.size)
     while nv > m and ceu.size:
         src = np.concatenate([ceu, cev])
         dst = np.concatenate([cev, ceu])
@@ -279,7 +361,6 @@ def _coarsen_hem(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
         merge_map = np.arange(nv, dtype=np.int64)
         merge_map[pv] = pu        # matched pairs are disjoint
         uniq, new_of = np.unique(merge_map, return_inverse=True)
-        label = new_of[label]
         nv = int(uniq.size)
         cload = np.bincount(new_of, weights=cload, minlength=nv)
         ceu, cev = new_of[ceu], new_of[cev]
@@ -294,7 +375,8 @@ def _coarsen_hem(lw: np.ndarray, eu: np.ndarray, ev: np.ndarray,
         else:
             ceu = cev = np.empty(0, dtype=np.int64)
             cew = np.empty(0, dtype=np.float64)
-    return label
+        out.append((new_of, cload, ceu, cev, cew))
+    return out
 
 
 def _lpt_assign(gload: np.ndarray, m: int) -> np.ndarray:

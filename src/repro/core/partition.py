@@ -40,6 +40,8 @@ from .pgt import KIND_APP, CompiledPGT
 from .schedule import (DEFAULT_BANDWIDTH, PrefixCP, _critical_path_arrays,
                        _extract, _simulate_arrays, critical_path, edge_cost,
                        simulate_makespan)
+from .substrate import PartitionHierarchy
+from .substrate import dense_labels as _dense_labels
 from .unroll import PhysicalGraphTemplate
 
 # graphs up to this many drops evaluate merge checkpoints with the exact
@@ -625,21 +627,21 @@ class _BatchedMerger:
         return dep[gid]
 
 
-def _dense_labels(labels: np.ndarray) -> np.ndarray:
-    """Renumber arbitrary partition labels (e.g. union-find root ids) to
-    dense 0..P-1 int32 (value-ordered, so already-dense labels pass
-    through unchanged)."""
-    if labels.size == 0:
-        return labels.astype(np.int32, copy=False)
-    lo = int(labels.min())
-    span = int(labels.max()) - lo + 1
-    if 0 <= lo and span <= 4 * labels.size:
-        # scan-based renumber (no sort): same value order as np.unique
-        present = np.zeros(span, dtype=bool)
-        present[labels - lo] = True
-        remap = np.cumsum(present, dtype=np.int64) - 1
-        return remap[labels - lo].astype(np.int32)
-    return np.unique(labels, return_inverse=True)[1].astype(np.int32)
+def _record_hierarchy(pgt: CompiledPGT, best_k: int, best_labels: np.ndarray,
+                      snapshots: List[Tuple[int, float, np.ndarray]]) -> None:
+    """Record the merge hierarchy onto the PGT for the mapper.
+
+    The kept labelling is the finest level; snapshots *deeper* along the
+    merge prefix (``k > best_k``) are its coarser nested levels — the
+    union-find only ever coarsens, so every kept partition maps into
+    exactly one partition of each deeper snapshot.  ``map_partitions``
+    consumes this instead of re-coarsening from scratch (see
+    ``core/substrate.py``).
+    """
+    coarser = [_dense_labels(lab) for k, _, lab in snapshots if k > best_k]
+    _, load, mem, count, eu, ev, ew = pgt.partition_graph_arrays()
+    pgt._partition_hierarchy = PartitionHierarchy.from_labelings(
+        [best_labels] + coarser, load, mem, count, eu, ev, ew)
 
 
 def _merge_snapshots(pgt: CompiledPGT, a, dop: int, bandwidth: float,
@@ -715,6 +717,7 @@ def _min_time_compiled(pgt: CompiledPGT, dop: int, bandwidth: float,
                        max_trials: Optional[int] = None) -> PartitionResult:
     a = _extract(pgt)
     n = pgt.num_drops
+    pgt._partition_hierarchy = None
     if n == 0:
         pgt.partition = np.empty(0, dtype=np.int32)
         return PartitionResult(0, 0.0, "min_time", dop)
@@ -725,6 +728,7 @@ def _min_time_compiled(pgt: CompiledPGT, dop: int, bandwidth: float,
 
     best_labels = _dense_labels(best_labels)
     pgt.partition = best_labels
+    _record_hierarchy(pgt, best_k, best_labels, snapshots)
     nparts = int(best_labels.max()) + 1 if best_labels.size else 0
     if n <= EXACT_EVAL_MAX_DROPS:
         makespan = best_t
@@ -823,6 +827,9 @@ def _min_res_compiled(pgt: CompiledPGT, deadline: float, dop: int,
                       bandwidth: float) -> PartitionResult:
     a = _extract(pgt)
     n = pgt.num_drops
+    # min_res labellings are fold products, not the recorded merge chain —
+    # any hierarchy from an earlier min_time run is stale for them
+    pgt._partition_hierarchy = None
     if n == 0:
         pgt.partition = np.empty(0, dtype=np.int32)
         return PartitionResult(0, 0.0, "min_res", dop)

@@ -35,6 +35,21 @@ from .logical import GraphValidationError
 KIND_APP = 0
 KIND_DATA = 1
 
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def _check_int32_capacity(num_drops: int, num_edges: int,
+                          context: str) -> None:
+    """Drop/edge ids are stored as int32 throughout the compiled path;
+    beyond 2^31-1 of either the ids would silently wrap.  Raise with a
+    clear message instead (the paper's regime tops out at tens of
+    millions — two orders of magnitude of headroom)."""
+    if num_drops > _INT32_MAX or num_edges > _INT32_MAX:
+        raise GraphValidationError(
+            f"{context}: {num_drops} drops / {num_edges} edges exceed the "
+            f"int32 index capacity ({_INT32_MAX}); the compiled "
+            "representation does not support graphs this large")
+
 
 def _uid_str(name: str, idx: Tuple[int, ...]) -> str:
     return name if not idx else f"{name}#{'.'.join(map(str, idx))}"
@@ -366,6 +381,8 @@ class CompiledPGT:
         self._group_bases = [g.base for g in groups]
         self._group_by_name = {g.name: g for g in groups}
         n = int(kind_arr.shape[0])
+        _check_int32_capacity(n, int(edge_src.shape[0]),
+                              f"CompiledPGT({name!r})")
         self.num_drops = n
         self.kind_arr = kind_arr
         self.exec_arr = exec_arr
@@ -397,6 +414,9 @@ class CompiledPGT:
         self._levels: Optional[np.ndarray] = levels
         self._order: Optional[np.ndarray] = None
         self._evol: Optional[np.ndarray] = None
+        # merge hierarchy recorded by min_time (core/substrate.py); the
+        # mapper consumes it instead of re-coarsening the partition graph
+        self._partition_hierarchy = None
         if validate_dag and levels is None:
             self.topological_order_ids()   # raises on cycles
 
@@ -610,8 +630,10 @@ class CompiledPGT:
         """Per-drop incoming edge count (the frontier scheduler's
         ``pending_inputs`` seed)."""
         if self._indeg is None:
+            # int32: in-degree <= num_edges, which the construction guard
+            # bounds to int32 range (halves the 10M tier's counter memory)
             self._indeg = np.bincount(
-                self.edge_dst, minlength=self.num_drops).astype(np.int64)
+                self.edge_dst, minlength=self.num_drops).astype(np.int32)
         return self._indeg
 
     def group_idx_arr(self) -> np.ndarray:
@@ -717,6 +739,8 @@ class CompiledPGT:
         mapper keep up with million-drop graphs.
         """
         _, idx, shift, span = self.partition_index()
+        _check_int32_capacity(span, self.num_edges,
+                              f"partition_graph_arrays({self.name!r})")
         if span == 0:
             e = np.empty(0, dtype=np.int64)
             z = np.empty(0, dtype=np.float64)
@@ -765,15 +789,17 @@ def _kahn_levels(n: int, esrc: np.ndarray,
     Raises on cycles.
     """
     if n == 0:
-        return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
-    indeg = np.bincount(edst, minlength=n).astype(np.int64)
+        return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32))
+    indeg = np.bincount(edst, minlength=n).astype(np.int32)
     order_e = np.argsort(esrc, kind="stable")
     sorted_dst = edst[order_e]
     counts = np.bincount(esrc, minlength=n)
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(counts, out=indptr[1:])
 
-    levels = np.full(n, -1, dtype=np.int64)
+    # int32 levels: the level count is bounded by the drop count, which
+    # the construction guard keeps within int32 range
+    levels = np.full(n, -1, dtype=np.int32)
     chunks: List[np.ndarray] = []
     frontier = np.flatnonzero(indeg == 0)
     level = 0

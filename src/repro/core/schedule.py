@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .pgt import KIND_DATA, CompiledPGT, _kahn_levels, coo_to_csr
+from .substrate import level_structure as _level_structure
 from .unroll import PhysicalGraphTemplate
 
 DEFAULT_BANDWIDTH = 1e9   # bytes/s across partitions (homogeneous links)
@@ -135,24 +136,10 @@ class _Arrays:
         level with ``bounds[lv]:bounds[lv+1]`` slicing out one level.
         """
         if self._lvl_struct is None:
-            levels = self.levels
-            max_lv = int(levels.max()) if self.n else 0
-            if self.esrc.size:
-                edge_lv = levels[self.edst]
-                e_order = np.argsort(edge_lv, kind="stable")
-                edge_lv_sorted = edge_lv[e_order]
-                bounds = np.searchsorted(
-                    edge_lv_sorted, np.arange(edge_lv_sorted[-1] + 2))
-                esrc_s, edst_s = self.esrc[e_order], self.edst[e_order]
-            else:
-                e_order = np.empty(0, dtype=np.int64)
-                bounds = None
-                esrc_s = edst_s = e_order
-            node_order = np.argsort(levels, kind="stable")
-            nbounds = np.searchsorted(
-                levels[node_order], np.arange(max_lv + 2))
-            self._lvl_struct = (esrc_s, edst_s, e_order, bounds,
-                                node_order, nbounds, max_lv)
+            # the computation lives in core/substrate.py — it is the
+            # partition-independent piece of the shared level substrate
+            self._lvl_struct = _level_structure(self.levels, self.esrc,
+                                                self.edst, self.n)
         return self._lvl_struct
 
     def in_csr(self):
@@ -171,8 +158,11 @@ def _extract(pgt) -> _Arrays:
         a.n = pgt.num_drops
         a.weight = pgt.weight_arr
         a.is_data = pgt.kind_arr == KIND_DATA
-        a.esrc = pgt.edge_src.astype(np.int64)
-        a.edst = pgt.edge_dst.astype(np.int64)
+        # int32 stays int32: every consumer (bincount, level bucketing,
+        # PrefixCP gathers, coo_to_csr) is dtype-generic, and the 10M
+        # tier saves two 80MB widening copies here
+        a.esrc = pgt.edge_src
+        a.edst = pgt.edge_dst
         a.evol = pgt.edge_volumes()
         a.levels = pgt.topo_levels()
         a._build_order = pgt.topological_order_ids

@@ -623,6 +623,11 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
         sz = full_sizes[name][pos]
         return (lin // (st * sz)) * st + lin % st
 
+    # expansion arithmetic runs in int64 (safe for any index products);
+    # the *stored* per-edge results are narrowed to int32 whenever the
+    # drop count fits — at the 10M tier this halves the peak footprint
+    # of the accumulated edge lists
+    idx_dtype = np.int32 if n <= np.iinfo(np.int32).max else np.int64
     srcs: List[np.ndarray] = []
     dsts: List[np.ndarray] = []
     strs: List[np.ndarray] = []
@@ -704,23 +709,31 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
             if not ok.all():
                 s_ids, d_ids = s_ids[ok], d_ids[ok]
 
-        srcs.append(s_ids)
-        dsts.append(d_ids)
+        srcs.append(s_ids.astype(idx_dtype, copy=False))
+        dsts.append(d_ids.astype(idx_dtype, copy=False))
         strs.append(np.full(s_ids.shape[0], e.streaming, dtype=bool))
 
     if srcs:
+        # release each chunk list as soon as its concatenation exists:
+        # peak memory is one extra copy of one array, not of all three
         esrc = np.concatenate(srcs)
+        srcs.clear()
         edst = np.concatenate(dsts)
+        dsts.clear()
         estr = np.concatenate(strs)
+        strs.clear()
         if need_dedup:
             # dedup (parallel logical edges / alias rewrites), like the
-            # dict path's seen-set; canonical order is (src, dst)
-            key = (esrc * np.int64(n) + edst) * 2 + estr
+            # dict path's seen-set; canonical order is (src, dst).  The
+            # packed key widens explicitly — int32 storage must not make
+            # the key arithmetic wrap
+            key = (esrc.astype(np.int64) * np.int64(n)
+                   + edst) * 2 + estr
             _, first = np.unique(key, return_index=True)
             esrc, edst, estr = esrc[first], edst[first], estr[first]
     else:
-        esrc = np.empty(0, dtype=np.int64)
-        edst = np.empty(0, dtype=np.int64)
+        esrc = np.empty(0, dtype=np.int32)
+        edst = np.empty(0, dtype=np.int32)
         estr = np.empty(0, dtype=bool)
 
     levels: Optional[np.ndarray] = None
@@ -747,8 +760,10 @@ def compile_unroll(lg: LogicalGraph) -> "CompiledPGT":
                 indeg[v] -= 1
                 if indeg[v] == 0:
                     queue.append(v)
+        # int32 to match the vectorized Kahn's level dtype (level depth
+        # is bounded by the drop count, which fits int32 by construction)
         levels = np.repeat(
-            np.fromiter((leaf_lv[g.name] for g in groups), dtype=np.int64,
+            np.fromiter((leaf_lv[g.name] for g in groups), dtype=np.int32,
                         count=len(groups)),
             np.fromiter((g.count for g in groups), dtype=np.int64,
                         count=len(groups)))

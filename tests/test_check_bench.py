@@ -126,6 +126,47 @@ def test_write_baseline_applies_headroom(tmp_path):
     assert rc == 0 and report["failures"] == []
 
 
+def test_malformed_rows_warn_and_skip(tmp_path, capsys):
+    # rows missing mode/tier/value must be skipped with a warning, never
+    # crash the gate (truncated or hand-edited results files)
+    results = tmp_path / "results"
+    results.mkdir(parents=True)
+    with open(results / "bench_execute.json", "w") as fh:
+        json.dump({"rows": [
+            {"tier": 10000, "mode": "compiled", "drops_per_s": 500000.0},
+            {"tier": 10000, "drops_per_s": 1.0},        # no mode
+            {"mode": "objects", "drops_per_s": 2.0},    # no tier
+            {"tier": 10000, "mode": "bad", "drops_per_s": "n/a"},
+        ]}, fh)
+    with open(results / "bench_translate.json", "w") as fh:
+        json.dump({"rows": [
+            {"metric": "translate_csr_drops_per_s[w=1]", "value": 90000.0},
+            {"metric": "smoke_drops_per_s[w=2]"},       # no value
+            {"metric": "smoke_drops_per_s[w=3]", "value": None},
+        ]}, fh)
+    cur = cb.collect_current(results)
+    assert cur == {
+        "execute:compiled:10000:drops_per_s": 500000.0,
+        "translate:translate_csr_drops_per_s[w=1]": 90000.0,
+    }
+    err = capsys.readouterr().err
+    assert err.count("skipping malformed row") == 5
+
+
+def test_baseline_floor_for_absent_tier_warns(tmp_path, capsys):
+    # a baseline floor whose tier is absent from current results warns
+    # on stderr but never fails the gate
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    **{"execute:compiled:10000000:drops_per_s": 1e6})
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    assert "execute:compiled:10000000:drops_per_s" in \
+        capsys.readouterr().err
+    missing = [r for r in report["checked"] if r["status"] == "missing"]
+    assert len(missing) == 1
+
+
 def test_repo_baseline_matches_repo_results():
     """The committed baseline must stay consistent with the committed
     smoke results — a PR that improves throughput should refresh both."""

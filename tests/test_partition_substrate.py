@@ -1,0 +1,361 @@
+"""The shared partition substrate (``core/substrate.py``).
+
+``min_time`` records its union-find merge chain as a
+:class:`~repro.core.substrate.PartitionHierarchy`; ``map_partitions``
+consumes that hierarchy directly instead of re-coarsening from
+``partition_graph_arrays()``, and projects the coarse LPT assignment
+back down level by level with KL refinement at every level.
+
+Covers the PR-6 acceptance bars:
+
+* **shared hierarchy** — after ``min_time`` the hierarchy is recorded,
+  matches the kept partition, and the csr mapper runs off it without
+  ever calling ``partition_graph_arrays()``;
+* **round-trip** — every level's loads/mem/counts/edges are exactly the
+  parent-aggregation of the level below, and a coarse assignment
+  projected down preserves the edge cut exactly;
+* **per-level refinement** — with ``alpha=0`` (pure cut objective) the
+  cut never increases at any level, and ``refine_levels="all"`` lands a
+  final cut no worse than the legacy finest-only schedule on a
+  communication-heavy graph;
+* **equivalence** — mapper-on-hierarchy ≡ mapper-on-flat-arrays within
+  tolerance, and the csr mapper still agrees with the dict oracle on
+  weighted / multi-island / loop graphs;
+* **capacity** — the int32 index guard raises with a clear message.
+"""
+import random
+from collections import Counter
+from typing import Dict
+
+import numpy as np
+import pytest
+
+from repro.core import NodeInfo, map_partitions, min_res, min_time, unroll
+from repro.core.logical import GraphValidationError
+from repro.core.mapping import PartitionGraph
+from repro.core.pgt import CompiledPGT, _check_int32_capacity
+from repro.core.substrate import (PartitionHierarchy, aggregate_edges,
+                                  dense_labels)
+from repro.core.unroll import unroll_dict
+from repro.dsl import GraphBuilder
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+
+def random_dag_lg(seed: int, n_app: int = 24, p: float = 0.25,
+                  vmax: float = 1e9, tmax: float = 8.0):
+    """Irregular communication-heavy DAG (comm costs ~ task times).
+
+    On graphs like this the exact merge-snapshot makespans are
+    non-monotone in the prefix length, so ``min_time`` keeps a partial
+    prefix and the snapshots beyond it become real coarser levels —
+    the recorded hierarchy is genuinely multi-level.
+    """
+    rng = random.Random(seed)
+    g = GraphBuilder(f"r{seed}")
+    for i in range(n_app):
+        g.component(f"a{i}", app="noop",
+                    time=round(rng.uniform(0.5, tmax), 2))
+    di = 0
+    for j in range(1, n_app):
+        preds = [i for i in range(j) if rng.random() < p]
+        for i in preds[:3]:
+            d = f"d{di}"
+            di += 1
+            g.data(d, volume=round(rng.uniform(0.05, 1.0) * vmax, 0))
+            g.connect(f"a{i}", d)
+            g.connect(d, f"a{j}")
+    return g.graph()
+
+
+def weighted_lg(width: int):
+    g = GraphBuilder(f"wt{width}")
+    g.data("src", volume=2.0)
+    with g.scatter("sc", width):
+        g.component("w", app="noop", time=3.0)
+        g.data("d", volume=5.0)
+        g.component("w2", app="identity", time=1.0)
+        g.data("d2", volume=0.5)
+    with g.gather("ga", width):
+        g.component("r", app="noop", time=2.0)
+    g.data("out")
+    g.chain("src", "w", "d", "w2", "d2", "r", "out")
+    return g.graph()
+
+
+def multi_island_lg(islands: int = 3, width: int = 12):
+    g = GraphBuilder("mi")
+    for k in range(islands):
+        g.data(f"src{k}", volume=1.0)
+        with g.scatter(f"sc{k}", width):
+            g.component(f"w{k}", app="noop", time=1.0 + k)
+            g.data(f"d{k}", volume=1.0)
+        g.chain(f"src{k}", f"w{k}", f"d{k}")
+    return g.graph()
+
+
+def loop_lg(iters: int = 5):
+    g = GraphBuilder("lp")
+    g.data("init")
+    g.component("seed", app="identity", time=0.5)
+    with g.loop("lp", iters):
+        g.data("x", loop_entry=True)
+        g.component("inc", app="identity", time=1.0)
+        g.data("y", loop_exit=True, carries="x")
+    g.component("out", app="identity", time=0.5)
+    g.data("res")
+    g.chain("init", "seed", "x", "inc", "y")
+    g.chain("y", "out", "res")
+    return g.graph()
+
+
+def _multilevel_pgt(seed: int = 1):
+    pgt = unroll(random_dag_lg(seed))
+    min_time(pgt, dop=1)
+    hier = pgt._partition_hierarchy
+    assert hier is not None and hier.num_levels > 1, \
+        "expected a multi-level recorded hierarchy on this graph"
+    return pgt, hier
+
+
+def assignment_cost(pgt, assign: Dict[int, str],
+                    alpha: float = 1.0, beta: float = 1e-9) -> float:
+    g = PartitionGraph.from_pgt(pgt)
+    loads: Counter = Counter()
+    for p, w in g.vweights.items():
+        loads[assign[p]] += w + 1e-6 * g.vmem[p]
+    cut = sum(w for (a, b), w in g.eweights.items()
+              if assign[a] != assign[b])
+    return alpha * sum(v * v for v in loads.values()) + beta * cut
+
+
+# ---------------------------------------------------------------------------
+# shared hierarchy: recorded by min_time, consumed by map_partitions
+# ---------------------------------------------------------------------------
+
+
+def test_min_time_records_matching_hierarchy():
+    pgt, hier = _multilevel_pgt()
+    assert hier.matches(pgt)
+    nparts = int(pgt.partition.max()) + 1
+    assert hier.levels[0].num_vertices == nparts
+    # levels strictly coarsen
+    sizes = [lv.num_vertices for lv in hier.levels]
+    assert sizes == sorted(sizes, reverse=True)
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))
+
+
+def test_mapper_runs_off_hierarchy_without_recoarsening(monkeypatch):
+    """With a fresh hierarchy the csr mapper must never fall back to
+    ``partition_graph_arrays()`` — the whole point of the substrate."""
+    pgt, _ = _multilevel_pgt()
+
+    def _boom(self):
+        raise AssertionError("mapper re-coarsened from flat arrays")
+
+    monkeypatch.setattr(CompiledPGT, "partition_graph_arrays", _boom)
+    nodes = [NodeInfo(f"n{i}") for i in range(3)]
+    assign = map_partitions(pgt, nodes)
+    assert set(assign.values()) <= {"n0", "n1", "n2"}
+    assert len(assign) == int(pgt.partition.max()) + 1
+
+
+def test_stale_partition_breaks_match_and_falls_back():
+    """Mutating ``pgt.partition`` after min_time (e.g. annealing) makes
+    the recorded hierarchy stale; the mapper must detect that and fall
+    back to the flat arrays rather than stamp a wrong placement."""
+    pgt, hier = _multilevel_pgt()
+    pgt.partition[0] = pgt.partition.max() + 1
+    assert not hier.matches(pgt)
+    nodes = [NodeInfo("n0"), NodeInfo("n1")]
+    assign = map_partitions(pgt, nodes)   # flat-array fallback
+    assert set(assign) == set(np.unique(pgt.partition).tolist())
+
+
+def test_min_res_does_not_leave_a_stale_hierarchy():
+    pgt = unroll(random_dag_lg(1))
+    min_time(pgt, dop=1)
+    assert pgt._partition_hierarchy is not None
+    min_res(pgt, deadline=1e12)
+    assert pgt._partition_hierarchy is None
+
+
+# ---------------------------------------------------------------------------
+# round-trip: aggregates and cuts are exact across levels
+# ---------------------------------------------------------------------------
+
+
+def test_level_aggregates_round_trip():
+    _, hier = _multilevel_pgt()
+    for fine, coarse in zip(hier.levels, hier.levels[1:]):
+        parent = fine.parent
+        nv = coarse.num_vertices
+        assert parent is not None and int(parent.max()) + 1 == nv
+        np.testing.assert_allclose(
+            np.bincount(parent, weights=fine.load, minlength=nv),
+            coarse.load)
+        np.testing.assert_allclose(
+            np.bincount(parent, weights=fine.mem, minlength=nv),
+            coarse.mem)
+        np.testing.assert_array_equal(
+            np.bincount(parent, weights=fine.count,
+                        minlength=nv).astype(np.int64),
+            coarse.count)
+        eu, ev, ew = aggregate_edges(fine.eu, fine.ev, fine.ew, parent, nv)
+        np.testing.assert_array_equal(eu, coarse.eu)
+        np.testing.assert_array_equal(ev, coarse.ev)
+        np.testing.assert_allclose(ew, coarse.ew)
+
+
+def test_projection_preserves_cut_exactly():
+    _, hier = _multilevel_pgt()
+    rng = np.random.RandomState(7)
+    for fine, coarse in zip(hier.levels, hier.levels[1:]):
+        a_coarse = rng.randint(0, 3, size=coarse.num_vertices)
+        a_fine = a_coarse[fine.parent]
+        assert coarse.cut(a_coarse) == pytest.approx(fine.cut(a_fine))
+
+
+def test_aggregate_edges_drops_internal_and_sums_parallel():
+    eu = np.array([0, 1, 2, 3], dtype=np.int64)
+    ev = np.array([1, 2, 3, 0], dtype=np.int64)
+    ew = np.array([1.0, 2.0, 3.0, 4.0])
+    parent = np.array([0, 0, 1, 1], dtype=np.int32)   # {0,1} {2,3}
+    ceu, cev, cew = aggregate_edges(eu, ev, ew, parent, 2)
+    # edges 0->1 and 2->3 are internal; 1->2 and 3->0 both cross and
+    # collapse onto the canonical (0, 1) pair with summed weight
+    assert ceu.tolist() == [0]
+    assert cev.tolist() == [1]
+    assert cew.tolist() == [6.0]
+
+
+def test_dense_labels_contiguous_and_consistent():
+    lab = np.array([7, 3, 7, 9, 3], dtype=np.int64)
+    out = dense_labels(lab)
+    assert out.dtype == np.int32
+    assert sorted(np.unique(out).tolist()) == [0, 1, 2]
+    # same input label -> same output label, different -> different
+    assert out[0] == out[2] and out[1] == out[4]
+    assert len({int(out[0]), int(out[1]), int(out[3])}) == 3
+
+
+def test_from_labelings_copies_finest():
+    lab = np.array([0, 1, 0, 2], dtype=np.int32)
+    load = np.ones(3)
+    mem = np.zeros(3)
+    count = np.ones(3, dtype=np.int64)
+    eu = np.array([0, 1], dtype=np.int64)
+    ev = np.array([1, 2], dtype=np.int64)
+    ew = np.array([1.0, 1.0])
+    hier = PartitionHierarchy.from_labelings([lab], load, mem, count,
+                                             eu, ev, ew)
+    lab[0] = 5   # in-place mutation (DropView / annealers do this)
+    assert hier.labels[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# per-level refinement
+# ---------------------------------------------------------------------------
+
+
+def test_alpha_zero_refinement_never_increases_cut():
+    pgt, _ = _multilevel_pgt()
+    stats = []
+    map_partitions(pgt, [NodeInfo(f"n{i}") for i in range(3)],
+                   alpha=0.0, beta=1.0, refine_levels="all",
+                   level_stats=stats)
+    assert len(stats) > 1, "expected refinement at more than one level"
+    for s in stats:
+        assert s["cut_after"] <= s["cut_before"] + 1e-9, s
+
+
+def test_all_levels_cut_not_worse_than_finest_only():
+    """The acceptance bar: per-level KL refinement lands a final cut no
+    worse than refining only at the finest level, on a graph whose
+    hierarchy is genuinely multi-level."""
+    results = {}
+    for mode in ("all", "finest"):
+        pgt, _ = _multilevel_pgt()
+        stats = []
+        map_partitions(pgt, [NodeInfo(f"n{i}") for i in range(3)],
+                       alpha=0.0, beta=1.0, refine_levels=mode,
+                       level_stats=stats)
+        results[mode] = stats[-1]["cut_after"]   # finest-level final cut
+    assert results["all"] <= results["finest"] + 1e-9, results
+
+
+def test_refine_levels_validated():
+    pgt, _ = _multilevel_pgt()
+    with pytest.raises(ValueError, match="refine_levels"):
+        map_partitions(pgt, [NodeInfo("n0")], refine_levels="sometimes")
+
+
+def test_level_stats_schema():
+    pgt, _ = _multilevel_pgt()
+    stats = []
+    map_partitions(pgt, [NodeInfo("n0"), NodeInfo("n1")],
+                   refine_levels="all", level_stats=stats)
+    keys = {"level", "vertices", "edges", "cut_before", "cut_after",
+            "imbalance_before", "imbalance_after"}
+    assert all(set(s) == keys for s in stats)
+    # levels reported coarse-to-fine, ending at the finest
+    assert [s["level"] for s in stats][-1] == 0
+
+
+# ---------------------------------------------------------------------------
+# equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_mapper_on_hierarchy_matches_flat_arrays():
+    """Consuming the recorded hierarchy must not cost placement quality
+    vs the legacy coarsen-from-scratch path."""
+    pgt_h, _ = _multilevel_pgt()
+    pgt_f, _ = _multilevel_pgt()
+    pgt_f._partition_hierarchy = None    # force the flat-array path
+    nodes = [NodeInfo(f"n{i}") for i in range(3)]
+    a_h = map_partitions(pgt_h, nodes)
+    a_f = map_partitions(pgt_f, nodes)
+    assert set(a_h) == set(a_f)
+    c_h = assignment_cost(pgt_h, a_h)
+    c_f = assignment_cost(pgt_f, a_f)
+    assert c_h <= c_f * 1.05 + 1e-12, (c_h, c_f)
+
+
+@pytest.mark.parametrize("lg_factory,m,use_dict", [
+    (lambda: weighted_lg(24), 4, False),
+    (lambda: multi_island_lg(islands=3, width=12), 4, False),
+    (lambda: loop_lg(6), 2, True),
+])
+def test_csr_dict_equivalence(lg_factory, m, use_dict):
+    lg = lg_factory()
+    pgt_csr = unroll_dict(lg) if use_dict else unroll(lg)
+    pgt_dic = unroll_dict(lg) if use_dict else unroll(lg)
+    min_time(pgt_csr, dop=4)
+    min_time(pgt_dic, dop=4)
+    nodes = [NodeInfo(f"node{i}") for i in range(m)]
+    a_csr = map_partitions(pgt_csr, nodes, mapping="csr")
+    a_dic = map_partitions(pgt_dic, nodes, mapping="dict")
+    assert set(a_csr) == set(a_dic)
+    names = {n.name for n in nodes}
+    assert set(a_csr.values()) <= names
+    c_csr = assignment_cost(pgt_csr, a_csr)
+    c_dic = assignment_cost(pgt_dic, a_dic)
+    assert c_csr <= c_dic * 1.05 + 1e-12, (c_csr, c_dic)
+
+
+# ---------------------------------------------------------------------------
+# int32 capacity guard
+# ---------------------------------------------------------------------------
+
+
+def test_int32_capacity_guard_raises_with_context():
+    _check_int32_capacity(10, 10, "ok")      # small graphs pass silently
+    too_many = np.iinfo(np.int32).max + 1
+    with pytest.raises(GraphValidationError, match="big-graph"):
+        _check_int32_capacity(too_many, 0, "big-graph")
+    with pytest.raises(GraphValidationError, match="int32 index capacity"):
+        _check_int32_capacity(0, too_many, "edges")
