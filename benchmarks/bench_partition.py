@@ -74,26 +74,33 @@ def run(dop: int = 8) -> List[Tuple[str, float, str]]:
     return rows
 
 
-def verbose_partition(num_nodes: int = 4, dop: int = 8) -> None:
+def verbose_partition(num_nodes: int = 4, dop: int = 8,
+                      refine_mode: str = "both") -> None:
     """Print the mapper's per-level uncoarsening stats (cut / imbalance
-    before and after KL refinement at each hierarchy level) for the
-    imaging-like graph — the substrate's multilevel path made visible."""
-    pgt = unroll(imaging_like_lg())
-    min_time(pgt, dop=dop)
-    hier = getattr(pgt, "_partition_hierarchy", None)
-    nlv = hier.num_levels if hier is not None else 0
-    print(f"# recorded hierarchy: {nlv} level(s), "
-          f"{int(pgt.partition.max()) + 1} partitions kept")
-    stats: List[Dict[str, float]] = []
+    before and after KL refinement at each hierarchy level, plus the
+    refine wall) for the imaging-like graph — the substrate's multilevel
+    path made visible.  ``refine_mode`` compares the boundary-only
+    worklist inner loop against the full-sweep oracle per level."""
+    modes = (["worklist", "sweep"] if refine_mode == "both"
+             else [refine_mode])
     nodes = [NodeInfo(f"node{i}") for i in range(num_nodes)]
-    map_partitions(pgt, nodes, level_stats=stats)
-    print("# level,vertices,edges,cut_before,cut_after,"
-          "imbalance_before,imbalance_after")
-    for s in stats:
-        print(f"level_{int(s['level'])},{int(s['vertices'])},"
-              f"{int(s['edges'])},{s['cut_before']:.1f},"
-              f"{s['cut_after']:.1f},{s['imbalance_before']:.3f},"
-              f"{s['imbalance_after']:.3f}")
+    for mode in modes:
+        pgt = unroll(imaging_like_lg())
+        min_time(pgt, dop=dop)
+        hier = getattr(pgt, "_partition_hierarchy", None)
+        nlv = hier.num_levels if hier is not None else 0
+        print(f"# refine_mode={mode}: recorded hierarchy {nlv} level(s), "
+              f"{int(pgt.partition.max()) + 1} partitions kept")
+        stats: List[Dict[str, float]] = []
+        map_partitions(pgt, nodes, refine_mode=mode, level_stats=stats)
+        print("# mode,level,vertices,edges,cut_before,cut_after,"
+              "imbalance_before,imbalance_after,refine_ms")
+        for s in stats:
+            print(f"{mode},level_{int(s['level'])},{int(s['vertices'])},"
+                  f"{int(s['edges'])},{s['cut_before']:.1f},"
+                  f"{s['cut_after']:.1f},{s['imbalance_before']:.3f},"
+                  f"{s['imbalance_after']:.3f},"
+                  f"{s['refine_s'] * 1e3:.2f}")
 
 
 def main() -> None:
@@ -102,11 +109,16 @@ def main() -> None:
     ap.add_argument("--verbose-partition", action="store_true",
                     help="also print the mapper's per-level cut/imbalance "
                          "stats from the shared partition hierarchy")
+    ap.add_argument("--refine-mode", default="both",
+                    choices=["worklist", "sweep", "both"],
+                    help="KL inner loop(s) for --verbose-partition: "
+                         "boundary-only worklist, full-sweep oracle, or "
+                         "both side by side")
     args = ap.parse_args()
     for name, val, extra in run(dop=args.dop):
         print(f"{name},{val:.2f},{extra}")
     if args.verbose_partition:
-        verbose_partition(dop=args.dop)
+        verbose_partition(dop=args.dop, refine_mode=args.refine_mode)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,181 @@
+"""Multi-tenant serving throughput: sessions/s through the resident engine.
+
+The paper's managers translate a pipeline shape once and run it
+per-observation; :class:`repro.core.manager.EngineManager` is that shape
+for the compiled path — a template cache (translate+map paid once per
+graph shape) plus N concurrent ``CompiledSession``s over shared node
+pools with bounded admission.  This benchmark measures, per graph tier
+(1k/10k/100k drops):
+
+* **cold vs warm**: full translate+map (``get_template`` on an empty
+  cache) against the median ``materialize()`` wall — the tentpole
+  target is warm ≥10x faster than cold at the 100k tier,
+* **sustained serving**: S sessions of the same shape submitted under
+  ``--concurrent`` (default 4) concurrent execution — sessions/s plus
+  p50/p99 *session latency* (submit-to-report, queueing included).
+
+Rows land JSON-merged by (mode, tier) in ``results/bench_serve.json``
+for the ``scripts/check_bench.py`` gate: ``sessions_per_s`` and
+``materialize_speedup`` are floor metrics, ``p99_session_s`` is a
+lower-is-better ceiling.
+
+Usage:
+  python benchmarks/bench_serve.py                    # full tier suite
+  python benchmarks/bench_serve.py --tiers 10000      # CI smoke tier
+  python benchmarks/bench_serve.py --sessions 16 --concurrent 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import statistics
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core import EngineManager
+from repro.dsl import GraphBuilder
+
+
+def peak_rss_mb() -> float:
+    """Process peak RSS in MB (cumulative high-water; report-only)."""
+    return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                 / 1024.0, 1)
+
+# drops per unit width in make_lg: src + width*(w, d, w2, d2) + r + out
+DROPS_PER_WIDTH = 4
+
+# sessions per tier: enough for stable quantiles at small tiers without
+# making the 100k tier (whose per-session wall is ~100x larger) crawl
+SESSIONS_PER_TIER = {1_000: 64, 10_000: 32, 100_000: 8}
+
+RESULTS_PATH = Path(__file__).resolve().parents[1] / "results" / \
+    "bench_serve.json"
+
+
+def make_lg(width: int):
+    g = GraphBuilder(f"serve{width}")
+    g.data("src")
+    with g.scatter("sc", width):
+        g.component("w", app="noop", time=0.0)
+        g.data("d")
+        g.component("w2", app="identity", time=0.0)
+        g.data("d2")
+    with g.gather("ga", width):
+        g.component("r", app="noop", time=0.0)
+    g.data("out")
+    g.chain("src", "w", "d", "w2", "d2", "r", "out")
+    return g.graph()
+
+
+def _close_probe(mgr: EngineManager, session) -> None:
+    """Release a session materialized outside submit() (timing probes)."""
+    for nm in mgr.master.node_managers().values():
+        nm.compiled_sessions.pop(session.session_id, None)
+    mgr.master._sessions.pop(session.session_id, None)
+    session.close()
+
+
+def run_tier(target_drops: int, sessions: Optional[int] = None,
+             concurrent: int = 4, materialize_probes: int = 5,
+             timeout: float = 600.0) -> Dict[str, float]:
+    width = max(target_drops // DROPS_PER_WIDTH, 1)
+    if sessions is None:
+        sessions = SESSIONS_PER_TIER.get(target_drops, 8)
+    lg = make_lg(width)
+    with EngineManager(num_nodes=4, workers_per_node=8, dop=64,
+                       max_concurrent=concurrent,
+                       max_pending=sessions) as mgr:
+        # cold: full translate + map + node-slice argsort (empty cache)
+        t0 = time.monotonic()
+        template = mgr.get_template(lg)
+        cold_s = time.monotonic() - t0
+        n = template.num_drops
+        # warm: median of repeated O(drops) materializations
+        walls: List[float] = []
+        for i in range(materialize_probes):
+            t0 = time.monotonic()
+            s = template.materialize(f"probe-{target_drops}-{i}",
+                                     master=mgr.master)
+            walls.append(time.monotonic() - t0)
+            _close_probe(mgr, s)
+        warm_s = statistics.median(walls)
+        # sustained concurrent serving: S sessions, blocking admission
+        t0 = time.monotonic()
+        tickets = [mgr.submit(lg, inputs={"src": 1}, timeout=timeout,
+                              block=True) for _ in range(sessions)]
+        reports = [t.result() for t in tickets]
+        wall = time.monotonic() - t0
+        for rep in reports:
+            assert rep.ok, (rep.state, rep.errors[:3])
+        lats = sorted(t.latency for t in tickets)
+        stats = mgr.stats()
+    return {
+        "tier": target_drops,
+        "mode": "serve",
+        "drops": n,
+        "sessions": sessions,
+        "concurrent": concurrent,
+        "cold_translate_map_s": round(cold_s, 4),
+        "materialize_s": round(warm_s, 6),
+        "materialize_speedup": round(cold_s / max(warm_s, 1e-9), 1),
+        "wall_s": round(wall, 4),
+        "sessions_per_s": round(sessions / wall, 2),
+        "session_drops_per_s": round(sessions * n / wall, 1),
+        "p50_session_s": round(lats[len(lats) // 2], 4),
+        "p99_session_s": round(
+            lats[min(len(lats) - 1, int(0.99 * (len(lats) - 1)))], 4),
+        "template_hits": stats["templates"]["hits"],
+        "rss_mb_peak": peak_rss_mb(),
+    }
+
+
+def run(tiers=(1_000, 10_000, 100_000), sessions: Optional[int] = None,
+        concurrent: int = 4) -> List[Dict[str, float]]:
+    return [run_tier(t, sessions=sessions, concurrent=concurrent)
+            for t in tiers]
+
+
+def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
+    for r in rows:
+        print(f"serve_sessions_per_s[n={r['drops']}],"
+              f"{r['sessions_per_s']:.2f},"
+              f"sessions={r['sessions']};concurrent={r['concurrent']};"
+              f"cold_s={r['cold_translate_map_s']};"
+              f"materialize_s={r['materialize_s']};"
+              f"materialize_speedup={r['materialize_speedup']}x;"
+              f"p50_s={r['p50_session_s']};p99_s={r['p99_session_s']};"
+              f"hits={r['template_hits']}")
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    if merge and RESULTS_PATH.exists():
+        # keep every other (mode, tier) cell — a partial run (e.g. the
+        # CI smoke tier) must not delete the other tiers' trend rows
+        with open(RESULTS_PATH) as fh:
+            old = json.load(fh).get("rows", [])
+        new_keys = {(r["mode"], r["tier"]) for r in rows}
+        rows = [r for r in old
+                if (r.get("mode"), r.get("tier")) not in new_keys] + rows
+    with open(RESULTS_PATH, "w") as fh:
+        json.dump({"benchmark": "bench_serve", "rows": rows}, fh,
+                  indent=2)
+    print(f"# wrote {RESULTS_PATH}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiers", type=int, nargs="+", default=None,
+                    help="target drop counts (default 1k 10k 100k)")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="sessions per tier (default: tier-dependent, "
+                         f"{SESSIONS_PER_TIER})")
+    ap.add_argument("--concurrent", type=int, default=4,
+                    help="max concurrently executing sessions")
+    args = ap.parse_args()
+    tiers = tuple(args.tiers or [1_000, 10_000, 100_000])
+    emit(run(tiers, sessions=args.sessions, concurrent=args.concurrent),
+         merge=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,12 +12,21 @@ Metric keys:
 * ``execute:<mode>:<tier>:drops_per_s``  — from bench_execute rows,
 * ``translate:<metric name>``            — from bench_translate rows
   (``drops_per_s`` metrics only; us-per-drop rows are latencies, not
-  throughputs, and are skipped).
+  throughputs, and are skipped),
+* ``serve:<mode>:<tier>:sessions_per_s`` and
+  ``serve:<mode>:<tier>:materialize_speedup`` — from bench_serve rows
+  (the resident-manager serving bench).
 
-Rules:
+Two metric classes:
 
-* a metric present in both current results and baseline must satisfy
+* **floors** (higher is better — every throughput above) must satisfy
   ``current >= baseline * (1 - tolerance)``;
+* **ceilings** (lower is better — the baseline's ``ceilings`` section,
+  e.g. ``serve:<mode>:<tier>:p99_session_s`` session latency) must
+  satisfy ``current <= baseline * (1 + tolerance)``.
+
+Shared rules:
+
 * metrics missing on either side are reported but never fail the gate
   (partial runs — e.g. the 10k CI smoke — are legitimate);
 * the comparison (every metric, its delta, and any failures) is written
@@ -97,54 +106,134 @@ def translate_metrics(path: Path) -> Dict[str, float]:
     return out
 
 
-def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
-    out = execute_metrics(results_dir / "bench_execute.json")
-    out.update(translate_metrics(results_dir / "bench_translate.json"))
+def serve_metrics(path: Path) -> Dict[str, float]:
+    """Floor metrics from a bench_serve JSON:
+    ``serve:<mode>:<tier>:sessions_per_s`` and
+    ``serve:<mode>:<tier>:materialize_speedup`` (both higher-is-better).
+    Malformed rows are warned about and skipped."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        for field in ("sessions_per_s", "materialize_speedup"):
+            if field not in r:
+                continue
+            try:
+                out[f"serve:{r['mode']}:{r['tier']}:{field}"] = \
+                    float(r[field])
+            except (KeyError, TypeError, ValueError) as exc:
+                _warn(f"skipping malformed row {i} in {path.name}: "
+                      f"{exc!r}")
     return out
 
 
+def serve_ceilings(path: Path) -> Dict[str, float]:
+    """Ceiling (lower-is-better) metrics from a bench_serve JSON:
+    ``serve:<mode>:<tier>:p99_session_s`` session latency."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if "p99_session_s" not in r:
+            continue
+        try:
+            out[f"serve:{r['mode']}:{r['tier']}:p99_session_s"] = \
+                float(r["p99_session_s"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
+
+
+def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
+    out = execute_metrics(results_dir / "bench_execute.json")
+    out.update(translate_metrics(results_dir / "bench_translate.json"))
+    out.update(serve_metrics(results_dir / "bench_serve.json"))
+    return out
+
+
+def collect_ceilings(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
+    """Lower-is-better metrics, kept separate from the floor dict so a
+    number can never be gated in the wrong direction."""
+    return serve_ceilings(results_dir / "bench_serve.json")
+
+
 def compare(current: Dict[str, float], baseline: Dict[str, float],
-            tolerance: float) -> Dict[str, object]:
-    """Gate ``current`` against ``baseline``; returns the full report."""
+            tolerance: float,
+            ceil_current: Optional[Dict[str, float]] = None,
+            ceil_baseline: Optional[Dict[str, float]] = None
+            ) -> Dict[str, object]:
+    """Gate ``current`` against ``baseline``; returns the full report.
+
+    ``baseline`` holds floors (higher is better); ``ceil_baseline``
+    holds ceilings (lower is better, e.g. p99 latency), gated against
+    ``ceil_current`` with the inverted rule
+    ``current <= baseline * (1 + tolerance)``."""
     checked: List[Dict[str, object]] = []
     failures: List[Dict[str, object]] = []
-    for key in sorted(baseline):
-        base = float(baseline[key])
-        cur = current.get(key)
-        if cur is None:
-            checked.append({"metric": key, "baseline": base,
-                            "current": None, "status": "missing"})
-            continue
-        floor = base * (1.0 - tolerance)
-        ratio = cur / base if base else float("inf")
-        row: Dict[str, object] = {
-            "metric": key, "baseline": base, "current": cur,
-            "ratio": round(ratio, 4),
-            "status": "ok" if cur >= floor else "regressed",
-        }
-        checked.append(row)
-        if cur < floor:
-            failures.append(row)
-    extra = sorted(set(current) - set(baseline))
+
+    def _check(base_map: Dict[str, float], cur_map: Dict[str, float],
+               kind: str) -> None:
+        for key in sorted(base_map):
+            base = float(base_map[key])
+            cur = cur_map.get(key)
+            if cur is None:
+                checked.append({"metric": key, "kind": kind,
+                                "baseline": base, "current": None,
+                                "status": "missing"})
+                continue
+            if kind == "ceiling":
+                bound = base * (1.0 + tolerance)
+                ok = cur <= bound
+            else:
+                bound = base * (1.0 - tolerance)
+                ok = cur >= bound
+            ratio = cur / base if base else float("inf")
+            row: Dict[str, object] = {
+                "metric": key, "kind": kind, "baseline": base,
+                "current": cur, "bound": round(bound, 4),
+                "ratio": round(ratio, 4),
+                "status": "ok" if ok else "regressed",
+            }
+            checked.append(row)
+            if not ok:
+                failures.append(row)
+
+    _check(baseline, current, "floor")
+    _check(ceil_baseline or {}, ceil_current or {}, "ceiling")
+    extra = sorted((set(current) - set(baseline))
+                   | (set(ceil_current or {}) - set(ceil_baseline or {})))
     return {"tolerance": tolerance, "checked": checked,
             "failures": failures, "unbaselined": extra}
 
 
 def write_baseline(current: Dict[str, float],
                    path: Path = BASELINE_PATH,
-                   headroom: float = 0.5) -> None:
+                   headroom: float = 0.5,
+                   ceilings: Optional[Dict[str, float]] = None) -> None:
     """Refresh the committed baseline from current results, discounted by
-    ``headroom`` so slower CI machines don't trip the gate."""
+    ``headroom`` so slower CI machines don't trip the gate.  Floors are
+    discounted down; ceilings (lower-is-better latencies) are inflated
+    up by the same headroom."""
     metrics = {k: round(v * (1.0 - headroom), 1)
                for k, v in sorted(current.items())}
+    doc = {
+        "comment": "bench-regression floors (scripts/check_bench.py);"
+                   " values are measured throughput discounted by"
+                   f" {headroom:.0%} machine headroom"
+                   " (ceilings: measured latency inflated by the same)",
+        "metrics": metrics,
+    }
+    if ceilings:
+        doc["ceilings"] = {k: round(v * (1.0 + headroom), 4)
+                           for k, v in sorted(ceilings.items())}
     with open(path, "w") as fh:
-        json.dump({
-            "comment": "bench-regression floors (scripts/check_bench.py);"
-                       " values are measured throughput discounted by"
-                       f" {headroom:.0%} machine headroom",
-            "metrics": metrics,
-        }, fh, indent=2)
-    print(f"# wrote {path} ({len(metrics)} metrics)")
+        json.dump(doc, fh, indent=2)
+    print(f"# wrote {path} ({len(metrics)} floors, "
+          f"{len(ceilings or {})} ceilings)")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -165,12 +254,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     current = collect_current(args.results_dir)
+    ceilings = collect_ceilings(args.results_dir)
     if args.write_baseline:
         if not current:
             print("check_bench: no current results to baseline from",
                   file=sys.stderr)
             return 2
-        write_baseline(current, args.baseline, headroom=args.headroom)
+        write_baseline(current, args.baseline, headroom=args.headroom,
+                       ceilings=ceilings)
         return 0
 
     if not args.baseline.exists():
@@ -182,7 +273,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     tolerance = args.tolerance
     if tolerance is None:
         tolerance = float(base_doc.get("tolerance", DEFAULT_TOLERANCE))
-    report = compare(current, base_doc.get("metrics", {}), tolerance)
+    report = compare(current, base_doc.get("metrics", {}), tolerance,
+                     ceil_current=ceilings,
+                     ceil_baseline=base_doc.get("ceilings", {}))
     for row in report["checked"]:                     # type: ignore[index]
         if row["status"] == "missing":
             _warn(f"baseline floor {row['metric']!r} has no matching "
@@ -194,9 +287,12 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     for row in report["checked"]:                     # type: ignore[index]
         cur = row["current"]
+        kind = row.get("kind", "floor")
+        sign = 1.0 if kind == "ceiling" else -1.0
+        bound = float(row["baseline"]) * (1 + sign * tolerance)
         print(f"{row['status']:>9}  {row['metric']}: "
-              f"{'-' if cur is None else f'{cur:,.1f}'} "
-              f"(floor {float(row['baseline']) * (1 - tolerance):,.1f})")
+              f"{'-' if cur is None else f'{cur:,.4g}'} "
+              f"({kind} {bound:,.4g})")
     failures = report["failures"]                     # type: ignore[index]
     if failures:
         print(f"check_bench: {len(failures)} metric(s) regressed more "

@@ -18,6 +18,7 @@ from .graph_io import iter_pgt, load_lgt, load_pgt, save_lgt, save_pgt
 from .lifecycle import DataLifecycleManager
 from .logical import (GraphValidationError, LogicalGraph,
                       LogicalGraphTemplate)
+from .manager import AdmissionError, EngineManager, SessionTicket
 from .managers import (DataIslandDropManager, MasterDropManager,
                        NodeDropManager, get_app, make_cluster, register_app)
 from .mapping import NodeInfo, map_partitions, stamp_nodes
@@ -26,26 +27,29 @@ from .schedule import critical_path, partition_stats, simulate_makespan
 from .pgt import CompiledPGT, DropView
 from .session import (CompiledDropRef, CompiledSession, Session,
                       SessionState)
+from .templates import (GraphTemplate, TemplateCache, structural_hash,
+                        translate_lg)
 from .unroll import (Axis, DropSpec, PhysicalGraphTemplate, compile_unroll,
                      leaf_axes, unroll, unroll_dict)
 
 __all__ = [
-    "AppDrop", "AppState", "Axis", "CompiledDropRef", "CompiledFaultManager",
-    "CompiledPGT", "CompiledSession", "Construct", "DataDrop",
-    "DataIslandDropManager", "DataLifecycleManager", "Drop", "DropSpec",
-    "DropState", "DropView", "Event", "EventBus", "ExecHooks",
-    "ExecutionReport", "FailureScript", "FaultManager", "FilePayload",
-    "GraphValidationError", "Kind", "LogicalEdge", "LogicalGraph",
-    "LogicalGraphTemplate", "MasterDropManager", "MemoryPayload",
-    "NodeDropManager", "NodeInfo", "NullPayload", "PartitionResult",
-    "Payload", "PayloadError", "PhysicalGraphTemplate", "Pipeline",
-    "RecordingListener", "ResilienceConfig", "ResilienceStats",
-    "ResilientRunner", "RetryPolicy", "Session", "SessionState",
-    "StragglerPolicy", "StragglerWatcher", "compile_unroll",
-    "critical_path", "elastic_remap", "execute_frontier",
-    "execute_resilient", "get_app", "iter_pgt", "leaf_axes", "load_lgt",
-    "load_pgt", "make_cluster", "map_partitions", "min_res", "min_time",
-    "partition_stats", "register_app", "save_lgt", "save_pgt",
-    "simulate_makespan", "stamp_nodes", "unroll", "unroll_dict",
-    "with_retries",
+    "AdmissionError", "AppDrop", "AppState", "Axis", "CompiledDropRef",
+    "CompiledFaultManager", "CompiledPGT", "CompiledSession", "Construct",
+    "DataDrop", "DataIslandDropManager", "DataLifecycleManager", "Drop",
+    "DropSpec", "DropState", "DropView", "EngineManager", "Event",
+    "EventBus", "ExecHooks", "ExecutionReport", "FailureScript",
+    "FaultManager", "FilePayload", "GraphTemplate", "GraphValidationError",
+    "Kind", "LogicalEdge", "LogicalGraph", "LogicalGraphTemplate",
+    "MasterDropManager", "MemoryPayload", "NodeDropManager", "NodeInfo",
+    "NullPayload", "PartitionResult", "Payload", "PayloadError",
+    "PhysicalGraphTemplate", "Pipeline", "RecordingListener",
+    "ResilienceConfig", "ResilienceStats", "ResilientRunner", "RetryPolicy",
+    "Session", "SessionState", "SessionTicket", "StragglerPolicy",
+    "StragglerWatcher", "TemplateCache", "compile_unroll", "critical_path",
+    "elastic_remap", "execute_frontier", "execute_resilient", "get_app",
+    "iter_pgt", "leaf_axes", "load_lgt", "load_pgt", "make_cluster",
+    "map_partitions", "min_res", "min_time", "partition_stats",
+    "register_app", "save_lgt", "save_pgt", "simulate_makespan",
+    "stamp_nodes", "structural_hash", "translate_lg", "unroll",
+    "unroll_dict", "with_retries",
 ]

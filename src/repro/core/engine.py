@@ -16,7 +16,6 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from . import partition as partition_mod
 from .fault import FaultManager, StragglerWatcher
 from .lifecycle import DataLifecycleManager
 from .logical import LogicalGraph, LogicalGraphTemplate
@@ -26,7 +25,8 @@ from .pgt import CompiledPGT
 from .resilience import (CompiledFaultManager, ResilienceConfig,
                          execute_resilient)
 from .session import CompiledSession, Session, SessionState
-from .unroll import PhysicalGraphTemplate, unroll
+from .templates import GraphTemplate, translate_lg
+from .unroll import PhysicalGraphTemplate
 
 
 @dataclass
@@ -73,7 +73,8 @@ class Pipeline:
                  enable_dlm: bool = False,
                  enable_stragglers: bool = False,
                  execution: str = "objects",
-                 resilience: Optional[ResilienceConfig] = None) -> None:
+                 resilience: Optional[ResilienceConfig] = None,
+                 manager: Any = None) -> None:
         if execution not in ("objects", "compiled"):
             raise ValueError(f"unknown execution mode {execution!r}")
         if execution == "compiled" and (enable_dlm or enable_stragglers):
@@ -85,8 +86,25 @@ class Pipeline:
                 "resilience= is the compiled-path subsystem "
                 "(core.resilience); the object path uses "
                 "enable_stragglers / FaultManager (core.fault)")
-        self.master, self.nodes = make_cluster(
-            num_nodes, num_islands, workers_per_node)
+        if manager is not None:
+            # ride a resident EngineManager: shared cluster + executors
+            # + template cache; the Pipeline becomes a thin per-run view
+            if execution != "compiled":
+                raise ValueError(
+                    "manager= serves compiled sessions; use "
+                    "execution='compiled'")
+            if resilience is not None:
+                raise ValueError(
+                    "resilience= mutates the shared template PGT "
+                    "(node-failure remapping rewrites node_ids); run "
+                    "a standalone Pipeline for fault-injection tiers")
+            self.master, self.nodes = manager.master, manager.nodes
+            self._owns_cluster = False
+        else:
+            self.master, self.nodes = make_cluster(
+                num_nodes, num_islands, workers_per_node)
+            self._owns_cluster = True
+        self.manager = manager
         self.dop = dop
         self.algorithm = algorithm
         self.deadline = deadline
@@ -95,6 +113,7 @@ class Pipeline:
         self.execution = execution
         self.resilience = resilience
         self.pgt: Optional[PhysicalGraphTemplate] = None
+        self._template: Optional[GraphTemplate] = None
         self.session: Optional[Session] = None
         # FaultManager (objects) or CompiledFaultManager (compiled)
         self.fault_manager: Any = None
@@ -105,22 +124,17 @@ class Pipeline:
     # -- stage 4: translate ---------------------------------------------------
     def translate(self, lg: LogicalGraph) -> PhysicalGraphTemplate:
         t0 = time.monotonic()
-        pgt = unroll(lg)
-        if self.algorithm == "min_time":
-            partition_mod.min_time(pgt, dop=self.dop)
-        elif self.algorithm == "min_res":
-            dl = self.deadline if self.deadline is not None else float("inf")
-            partition_mod.min_res(pgt, deadline=dl, dop=self.dop)
-        elif self.algorithm == "none":
-            from .pgt import CompiledPGT
-            if isinstance(pgt, CompiledPGT):
-                import numpy as np
-                pgt.partition = np.arange(len(pgt), dtype=np.int32)
-            else:
-                for i, spec in enumerate(pgt.drops.values()):
-                    spec.partition = i
+        if self.manager is not None:
+            # resident path: translate+map once per shape, cached by
+            # structural hash — repeated runs of the same LG skip both
+            self._template = self.manager.get_template(
+                lg, algorithm=self.algorithm, dop=self.dop,
+                deadline=self.deadline)
+            pgt = self._template.pgt
         else:
-            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+            self._template = None
+            pgt = translate_lg(lg, algorithm=self.algorithm, dop=self.dop,
+                               deadline=self.deadline)
         self.translate_time = time.monotonic() - t0
         self.pgt = pgt
         return pgt
@@ -132,7 +146,16 @@ class Pipeline:
         pgt = pgt or self.pgt
         assert pgt is not None, "translate() first"
         t0 = time.monotonic()
-        if self.execution == "compiled":
+        if (self._template is not None
+                and pgt is self._template.pgt):
+            # manager path: the template is already mapped and carries the
+            # per-node slices — materialize is O(drops), no map, no argsort
+            self.map_time = 0.0
+            session = self._template.materialize(
+                session_id or f"s-{uuid.uuid4().hex[:8]}",
+                master=self.master)
+            self.fault_manager = None
+        elif self.execution == "compiled":
             if not isinstance(pgt, CompiledPGT):
                 # translate() always yields a CompiledPGT now (loop-carried
                 # graphs included); this lift only remains for explicitly
@@ -210,9 +233,10 @@ class Pipeline:
                 session, self.master, self.resilience, timeout=timeout,
                 fault_manager=self.fault_manager)
         else:
+            executors = (self.manager.executors if self.manager is not None
+                         else self.master.node_executors())
             finished = execute_frontier(
-                session, timeout=timeout,
-                executors=self.master.node_executors())
+                session, timeout=timeout, executors=executors)
             stats = None
         wall = time.monotonic() - t0
         errs = [f"{r.uid}: {(r.error_info or '')[:200]}"
@@ -238,7 +262,10 @@ class Pipeline:
         return self.execute(timeout=timeout, inputs=inputs)
 
     def shutdown(self) -> None:
-        self.master.shutdown()
+        # manager-owned clusters outlive any one Pipeline; only the
+        # manager's close() may kill the shared node pools
+        if self._owns_cluster:
+            self.master.shutdown()
 
     def __enter__(self) -> "Pipeline":
         return self

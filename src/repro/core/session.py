@@ -312,6 +312,7 @@ class CompiledSession:
         self.error_info: Dict[int, str] = {}
         self.node_slices: Dict[str, np.ndarray] = {}
         self.cross_node_edges = 0          # stat recorded at deploy
+        self.closed = False                # close() frees the payload table
         # resilience counters (maintained by core.resilience; always
         # present so monitoring code can read them unconditionally)
         self.recoveries = 0                # node-failure recovery passes
@@ -355,6 +356,20 @@ class CompiledSession:
         self.state = SessionState.CANCELLED
         self._finished.set()
 
+    def close(self) -> None:
+        """Release the session's mutable storage (resident-manager
+        eviction).  The dense payload table is the dominant per-session
+        allocation — dropping it is what makes closing a session under
+        :class:`repro.core.manager.EngineManager` actually free memory;
+        the shared template ``CompiledPGT`` is untouched.  Subsequent
+        reads/writes raise ``PayloadError``."""
+        self.closed = True
+        self.payloads = np.empty(0, dtype=object)
+        self.payload_present = np.empty(0, dtype=bool)
+        self.error_info = {}
+        self.node_slices = {}
+        self._finished.set()
+
     # -- data access (input seeding / result readout) ----------------------
     def index_of(self, uid: str) -> int:
         return self.pgt.index_of(uid)
@@ -365,6 +380,8 @@ class CompiledSession:
         State guard matches the object oracle: ``Drop.write`` only
         accepts writes before the drop is terminal."""
         from .drop import PayloadError
+        if self.closed:
+            raise PayloadError(f"session {self.session_id} is closed")
         idx = self.index_of(uid)
         if self.pgt.kind_arr[idx] != KIND_DATA:
             raise ValueError(f"cannot write app drop {uid!r}")
@@ -379,6 +396,8 @@ class CompiledSession:
 
     def _read_idx(self, idx: int) -> Any:
         from .drop import PayloadError
+        if self.closed:
+            raise PayloadError(f"session {self.session_id} is closed")
         if self.payload_kind[idx] == PK_NULL:
             return None
         if not self.payload_present[idx]:

@@ -37,15 +37,31 @@ def _write_results(directory: Path, compiled: float, objects: float,
         ]}, fh)
 
 
+def _write_serve(directory: Path, sessions_per_s: float = 300.0,
+                 speedup: float = 100.0, p99: float = 0.05) -> None:
+    directory.mkdir(parents=True, exist_ok=True)
+    with open(directory / "bench_serve.json", "w") as fh:
+        json.dump({"benchmark": "bench_serve", "rows": [
+            {"tier": 10000, "mode": "serve", "drops": 10003,
+             "sessions_per_s": sessions_per_s,
+             "materialize_speedup": speedup,
+             "p99_session_s": p99},
+        ]}, fh)
+
+
 def _write_baseline(path: Path, compiled: float, objects: float,
-                    translate: float = 90000.0, **extra) -> None:
+                    translate: float = 90000.0, ceilings=None,
+                    **extra) -> None:
     metrics = {"execute:compiled:10000:drops_per_s": compiled,
                "execute:objects:10000:drops_per_s": objects,
                "translate:translate_csr_drops_per_s[w=10000;n=60001]":
                    translate}
     metrics.update(extra)
+    doc = {"metrics": metrics}
+    if ceilings is not None:
+        doc["ceilings"] = ceilings
     with open(path, "w") as fh:
-        json.dump({"metrics": metrics}, fh)
+        json.dump(doc, fh)
 
 
 def _run(tmp_path: Path, argv_extra=()):
@@ -64,6 +80,85 @@ def test_metric_extraction(tmp_path):
         "execute:objects:10000:drops_per_s": 5000.0,
         "translate:translate_csr_drops_per_s[w=10000;n=60001]": 90000.0,
     }
+
+
+def test_serve_metric_extraction(tmp_path):
+    # serve rows feed floors (sessions/s, materialize speedup) and a
+    # SEPARATE ceilings dict (p99 latency) so a latency can never be
+    # gated as if it were a throughput
+    _write_serve(tmp_path / "results", 300.0, 120.0, 0.05)
+    cur = cb.serve_metrics(tmp_path / "results" / "bench_serve.json")
+    assert cur == {
+        "serve:serve:10000:sessions_per_s": 300.0,
+        "serve:serve:10000:materialize_speedup": 120.0,
+    }
+    ceil = cb.collect_ceilings(tmp_path / "results")
+    assert ceil == {"serve:serve:10000:p99_session_s": 0.05}
+
+
+def test_ceiling_within_tolerance_passes(tmp_path):
+    # p99 latency 20% up: within the 30% ceiling tolerance
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_serve(tmp_path / "results", p99=0.06)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    ceilings={"serve:serve:10000:p99_session_s": 0.05})
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    ceil_rows = [r for r in report["checked"] if r.get("kind") == "ceiling"]
+    assert [r["status"] for r in ceil_rows] == ["ok"]
+
+
+def test_ceiling_exceeded_fails(tmp_path):
+    # p99 latency doubled: a lower-is-better metric must fail the gate
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_serve(tmp_path / "results", p99=0.10)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    ceilings={"serve:serve:10000:p99_session_s": 0.05})
+    rc, report = _run(tmp_path)
+    assert rc == 1
+    assert [f["metric"] for f in report["failures"]] == \
+        ["serve:serve:10000:p99_session_s"]
+    assert report["failures"][0]["kind"] == "ceiling"
+
+
+def test_ceiling_improvement_never_fails(tmp_path):
+    # latency dropping 10x is an improvement — the inverted rule must
+    # not misread it the way a floor would
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_serve(tmp_path / "results", p99=0.005)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    ceilings={"serve:serve:10000:p99_session_s": 0.05})
+    rc, report = _run(tmp_path)
+    assert rc == 0 and report["failures"] == []
+
+
+def test_ceiling_missing_reported_not_failed(tmp_path):
+    # a baselined ceiling with no current measurement (smoke skipped the
+    # serve bench) is reported missing, never failed
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_baseline(tmp_path / "baseline.json", 500000.0, 5000.0,
+                    ceilings={"serve:serve:10000:p99_session_s": 0.05})
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    missing = [r for r in report["checked"] if r["status"] == "missing"]
+    assert [r["metric"] for r in missing] == \
+        ["serve:serve:10000:p99_session_s"]
+
+
+def test_write_baseline_inflates_ceilings(tmp_path):
+    # floors are discounted down by headroom, ceilings inflated up
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    _write_serve(tmp_path / "results", 300.0, 120.0, 0.05)
+    rc, _ = _run(tmp_path, ["--write-baseline", "--headroom", "0.5"])
+    assert rc == 0
+    doc = json.load(open(tmp_path / "baseline.json"))
+    assert doc["metrics"]["serve:serve:10000:sessions_per_s"] == \
+        pytest.approx(150.0)
+    assert doc["ceilings"]["serve:serve:10000:p99_session_s"] == \
+        pytest.approx(0.075)
+    # the freshly-written baseline gates the same results cleanly
+    rc, report = _run(tmp_path)
+    assert rc == 0 and report["failures"] == []
 
 
 def test_regression_over_tolerance_fails(tmp_path):
@@ -173,5 +268,7 @@ def test_repo_baseline_matches_repo_results():
     root = Path(__file__).resolve().parents[1]
     baseline = json.load(open(root / "results" / "baseline.json"))
     current = cb.collect_current(root / "results")
-    report = cb.compare(current, baseline["metrics"], cb.DEFAULT_TOLERANCE)
+    report = cb.compare(current, baseline["metrics"], cb.DEFAULT_TOLERANCE,
+                        ceil_current=cb.collect_ceilings(root / "results"),
+                        ceil_baseline=baseline.get("ceilings", {}))
     assert report["failures"] == [], report["failures"]

@@ -299,8 +299,9 @@ def test_level_stats_schema():
     map_partitions(pgt, [NodeInfo("n0"), NodeInfo("n1")],
                    refine_levels="all", level_stats=stats)
     keys = {"level", "vertices", "edges", "cut_before", "cut_after",
-            "imbalance_before", "imbalance_after"}
+            "imbalance_before", "imbalance_after", "refine_s"}
     assert all(set(s) == keys for s in stats)
+    assert all(s["refine_s"] >= 0.0 for s in stats)
     # levels reported coarse-to-fine, ending at the finest
     assert [s["level"] for s in stats][-1] == 0
 
