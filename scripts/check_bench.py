@@ -148,6 +148,27 @@ def serve_ceilings(path: Path) -> Dict[str, float]:
     return out
 
 
+def telemetry_ceilings(path: Path) -> Dict[str, float]:
+    """Ceiling metrics from bench_execute telemetry rows:
+    ``execute:telemetry:<tier>:overhead_pct`` — the instrumented-vs-clean
+    execute tax, which must stay low (ISSUE 8 bar: ≤10% effective)."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if r.get("mode") != "telemetry" \
+                or "telemetry_overhead_pct" not in r:
+            continue
+        try:
+            out[f"execute:telemetry:{r['tier']}:overhead_pct"] = \
+                float(r["telemetry_overhead_pct"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
+
+
 def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
     out = execute_metrics(results_dir / "bench_execute.json")
     out.update(translate_metrics(results_dir / "bench_translate.json"))
@@ -158,7 +179,9 @@ def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
 def collect_ceilings(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
     """Lower-is-better metrics, kept separate from the floor dict so a
     number can never be gated in the wrong direction."""
-    return serve_ceilings(results_dir / "bench_serve.json")
+    out = serve_ceilings(results_dir / "bench_serve.json")
+    out.update(telemetry_ceilings(results_dir / "bench_execute.json"))
+    return out
 
 
 def compare(current: Dict[str, float], baseline: Dict[str, float],

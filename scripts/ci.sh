@@ -33,6 +33,8 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
         --max-object-drops 100000
     echo "== recovery smoke bench (10k drops, kill 1 of 8 nodes at 50%) =="
     python benchmarks/bench_execute.py --tier recovery --tiers 10000
+    echo "== telemetry overhead bench (100k + 1M, exports Perfetto traces) =="
+    python benchmarks/bench_execute.py --telemetry --tiers 100000 1000000
     echo "== serve smoke bench (10k drops, resident manager sessions/s) =="
     python benchmarks/bench_serve.py --tiers 10000
     echo "== bench-regression gate (results vs results/baseline.json) =="

@@ -27,6 +27,8 @@ from .schedule import critical_path, partition_stats, simulate_makespan
 from .pgt import CompiledPGT, DropView
 from .session import (CompiledDropRef, CompiledSession, Session,
                       SessionState)
+from .telemetry import (MetricsRegistry, Span, TelemetryConfig, Timeline,
+                        export_chrome_trace)
 from .templates import (GraphTemplate, TemplateCache, structural_hash,
                         translate_lg)
 from .unroll import (Axis, DropSpec, PhysicalGraphTemplate, compile_unroll,
@@ -40,13 +42,16 @@ __all__ = [
     "EventBus", "ExecHooks", "ExecutionReport", "FailureScript",
     "FaultManager", "FilePayload", "GraphTemplate", "GraphValidationError",
     "Kind", "LogicalEdge", "LogicalGraph", "LogicalGraphTemplate",
-    "MasterDropManager", "MemoryPayload", "NodeDropManager", "NodeInfo",
+    "MasterDropManager", "MemoryPayload", "MetricsRegistry",
+    "NodeDropManager", "NodeInfo",
     "NullPayload", "PartitionResult", "Payload", "PayloadError",
     "PhysicalGraphTemplate", "Pipeline", "RecordingListener",
     "ResilienceConfig", "ResilienceStats", "ResilientRunner", "RetryPolicy",
-    "Session", "SessionState", "SessionTicket", "StragglerPolicy",
-    "StragglerWatcher", "TemplateCache", "compile_unroll", "critical_path",
-    "elastic_remap", "execute_frontier", "execute_resilient", "get_app",
+    "Session", "SessionState", "SessionTicket", "Span", "StragglerPolicy",
+    "StragglerWatcher", "TelemetryConfig", "TemplateCache", "Timeline",
+    "compile_unroll", "critical_path",
+    "elastic_remap", "execute_frontier", "execute_resilient",
+    "export_chrome_trace", "get_app",
     "iter_pgt", "leaf_axes", "load_lgt", "load_pgt", "make_cluster",
     "map_partitions", "min_res", "min_time", "partition_stats",
     "register_app", "save_lgt", "save_pgt", "simulate_makespan",

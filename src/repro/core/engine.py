@@ -25,6 +25,8 @@ from .pgt import CompiledPGT
 from .resilience import (CompiledFaultManager, ResilienceConfig,
                          execute_resilient)
 from .session import CompiledSession, Session, SessionState
+from .telemetry import (MetricsRegistry, Span, TelemetryConfig,
+                        export_chrome_trace)
 from .templates import GraphTemplate, translate_lg
 from .unroll import PhysicalGraphTemplate
 
@@ -74,7 +76,8 @@ class Pipeline:
                  enable_stragglers: bool = False,
                  execution: str = "objects",
                  resilience: Optional[ResilienceConfig] = None,
-                 manager: Any = None) -> None:
+                 manager: Any = None,
+                 telemetry: Optional[TelemetryConfig] = None) -> None:
         if execution not in ("objects", "compiled"):
             raise ValueError(f"unknown execution mode {execution!r}")
         if execution == "compiled" and (enable_dlm or enable_stragglers):
@@ -120,6 +123,24 @@ class Pipeline:
         self.translate_time = 0.0
         self.deploy_time = 0.0
         self.map_time = 0.0        # partition->node mapping share of deploy
+        # telemetry: inherit the manager's config/registry when riding a
+        # resident EngineManager (one registry per service, not per run)
+        if telemetry is not None:
+            self.telemetry = telemetry
+        elif manager is not None:
+            self.telemetry = manager.telemetry
+        else:
+            self.telemetry = TelemetryConfig()
+        if manager is not None and manager.metrics is not None:
+            self.metrics = manager.metrics
+        else:
+            self.metrics = MetricsRegistry() if self.telemetry.metrics \
+                else None
+        self.spans: List[Span] = []   # translate/map/deploy/execute
+
+    def _record_span(self, name: str, t0: float) -> None:
+        if self.telemetry.spans:
+            self.spans.append(Span(name, t0, time.monotonic()))
 
     # -- stage 4: translate ---------------------------------------------------
     def translate(self, lg: LogicalGraph) -> PhysicalGraphTemplate:
@@ -136,6 +157,7 @@ class Pipeline:
             pgt = translate_lg(lg, algorithm=self.algorithm, dop=self.dop,
                                deadline=self.deadline)
         self.translate_time = time.monotonic() - t0
+        self._record_span("translate", t0)
         self.pgt = pgt
         return pgt
 
@@ -167,6 +189,7 @@ class Pipeline:
             tm = time.monotonic()     # map share excludes the dict lift
             map_partitions(pgt, self.nodes)
             self.map_time = time.monotonic() - tm
+            self._record_span("map", tm)
             session = CompiledSession(
                 session_id or f"s-{uuid.uuid4().hex[:8]}", pgt)
             self.master.deploy_compiled(session, pgt)
@@ -179,7 +202,13 @@ class Pipeline:
                 session_id or f"s-{uuid.uuid4().hex[:8]}")
             self.master.deploy(session, pgt)
             self.fault_manager = FaultManager(session, pgt, self.master)
+        if isinstance(session, CompiledSession):
+            if self.telemetry.timeline:
+                session.enable_timeline()
+            if self.metrics is not None:
+                session.metrics = self.metrics
         self.deploy_time = time.monotonic() - t0
+        self._record_span("deploy", t0)
         self.session = session
         return session
 
@@ -204,6 +233,7 @@ class Pipeline:
         session.start()
         finished = session.wait(timeout)
         wall = time.monotonic() - t0
+        self._record_span("execute", t0)
         if watcher:
             watcher.stop()
         if dlm:
@@ -239,6 +269,7 @@ class Pipeline:
                 session, timeout=timeout, executors=executors)
             stats = None
         wall = time.monotonic() - t0
+        self._record_span("execute", t0)
         errs = [f"{r.uid}: {(r.error_info or '')[:200]}"
                 for r in session.errors()]
         return ExecutionReport(
@@ -260,6 +291,14 @@ class Pipeline:
         self.translate(lg)
         self.deploy()
         return self.execute(timeout=timeout, inputs=inputs)
+
+    def export_trace(self, path: str) -> Dict[str, int]:
+        """Write the last session's Perfetto trace (timeline required);
+        pipeline-stage spans ride along on their own track."""
+        assert self.session is not None, "run a session first"
+        return export_chrome_trace(
+            self.session, path, spans=self.spans,
+            batch_threshold=self.telemetry.trace_batch_threshold)
 
     def shutdown(self) -> None:
         # manager-owned clusters outlive any one Pipeline; only the

@@ -33,7 +33,11 @@ the oracle; ``tests/test_exec_equiv.py`` enforces it):
 Deliberate divergences (documented in ``docs/execute.md``): waves run
 single-threaded (``sleep`` apps in one wave cost ``max(seconds)``, i.e.
 ideal parallelism), streaming edges are treated as batch dependencies,
-and no per-drop events are published — that is the point.
+and no per-drop *success* events are published on the hot path — that is
+the point.  Observability is opt-in and array-native instead: per-drop
+timeline stamps and wave-granular metrics via ``core/telemetry.py``
+(``TelemetryConfig``), while session lifecycle and drop *failures* do
+surface on the session ``EventBus`` (see ``docs/observability.md``).
 """
 from __future__ import annotations
 
@@ -210,6 +214,11 @@ class _Dispatch:
         # spill files appear exactly as the object engine would write them
         self.fast_ok = not bool((session.payload_kind == PK_FILE).any())
         self.deadline = float("inf")   # set per run by execute_frontier
+        # telemetry (off unless the session carries a Timeline/registry):
+        # fast paths stamp whole batches, _run_python stamps per app
+        self.tl = session.timeline
+        self.wave = 0                  # current wave index, for stamps
+        self.m_batches = None          # Counter("exec.dispatch_batches")
 
     # -- wave entry ---------------------------------------------------------
     def dispatch(self, run_ids: np.ndarray) -> None:
@@ -234,17 +243,26 @@ class _Dispatch:
         order = np.lexsort((run_ids, nodes))
         run = run_ids[order]
         bounds = np.flatnonzero(np.diff(nodes[order])) + 1
-        python_parts = [self._dispatch_batch(batch)
-                        for batch in np.split(run, bounds)]
+        batches = np.split(run, bounds)
+        if self.m_batches is not None:
+            self.m_batches.inc(len(batches))
+        python_parts = [self._dispatch_batch(batch) for batch in batches]
         self._run_python_batch(np.concatenate(python_parts))
+
+    def _stamp_batch(self, ids: np.ndarray, t0: float) -> None:
+        """Timeline-stamp a terminal fast-path batch (end = now)."""
+        if self.tl is not None and ids.size:
+            self.tl.stamp_batch(ids, t0, time.monotonic(), self.wave)
 
     def _dispatch_batch(self, batch: np.ndarray) -> np.ndarray:
         """Run the fast-path apps of one per-node batch; return the
         registry (Python) apps for the wave-wide dispatch."""
         codes = self.app_code[batch]
+        t0 = time.monotonic() if self.tl is not None else 0.0
         none_ids = batch[codes == CODE_NONE]
         if none_ids.size:
             self.s.drop_state[none_ids] = ST_COMPLETED
+            self._stamp_batch(none_ids, t0)
         noop_ids = batch[codes == CODE_NOOP]
         if noop_ids.size:
             self._write_none_outputs(noop_ids)
@@ -316,17 +334,23 @@ class _Dispatch:
             raise _WaveTimeout
 
     # -- fast paths ---------------------------------------------------------
-    def _write_none_outputs(self, ids: np.ndarray) -> None:
-        """noop semantics: write ``None`` to every output, complete."""
+    def _write_none_outputs(self, ids: np.ndarray,
+                            t0: Optional[float] = None) -> None:
+        """noop semantics: write ``None`` to every output, complete.
+        ``t0`` carries a caller's earlier start stamp (the sleep batch
+        starts *before* it sleeps)."""
         if not self.fast_ok:
             self._run_python_batch(ids)
             return
         s = self.s
+        start = (time.monotonic() if t0 is None else t0) \
+            if self.tl is not None else 0.0
         dsts = _gather(self.out_indptr, self.out_cols, ids)
         if dsts.size:
             s.payloads[dsts] = None
             s.payload_present[dsts] = True
         s.drop_state[ids] = ST_COMPLETED
+        self._stamp_batch(ids, start)
 
     def _sleep_batch(self, ids: np.ndarray) -> None:
         """One wave of sleeps runs concurrently in the object engine; the
@@ -337,6 +361,7 @@ class _Dispatch:
         if not self.fast_ok:
             self._run_python_batch(ids)
             return
+        t0 = time.monotonic() if self.tl is not None else None
         secs = max(self._sleep_seconds(i) for i in ids.tolist())
         if secs > 0:
             remaining = self.deadline - time.monotonic()
@@ -344,7 +369,7 @@ class _Dispatch:
                 time.sleep(max(remaining, 0.0))
                 raise _WaveTimeout
             time.sleep(secs)
-        self._write_none_outputs(ids)
+        self._write_none_outputs(ids, t0)
 
     def _sleep_seconds(self, i: int) -> float:
         ov = self.pgt._params_override.get(i)
@@ -356,6 +381,7 @@ class _Dispatch:
         if not self.fast_ok:
             self._run_python_batch(ids)
             return
+        t0 = time.monotonic() if self.tl is not None else 0.0
         s = self.s
         single = ids[self.in_deg[ids] == 1]
         # multi-input: general list semantics via the registry path
@@ -382,6 +408,7 @@ class _Dispatch:
             s.payloads[dsts] = np.repeat(vals[fast], cnt)
             s.payload_present[dsts] = True
         s.drop_state[fast_ids] = ST_COMPLETED
+        self._stamp_batch(fast_ids, t0)
 
     # -- general path: the app registry -------------------------------------
     def app_call(self, i: int, out_ref=_DataRef):
@@ -408,6 +435,7 @@ class _Dispatch:
 
     def _run_python(self, i: int) -> None:
         s = self.s
+        t0 = time.monotonic() if self.tl is not None else 0.0
         try:
             func, refs, outs, app = self.app_call(i)
             if func is not None:
@@ -415,7 +443,9 @@ class _Dispatch:
             s.drop_state[i] = ST_COMPLETED
         except Exception:  # noqa: BLE001 - app failures become drop ERRORs
             s.drop_state[i] = ST_ERROR
-            s.error_info[int(i)] = traceback.format_exc(limit=8)
+            s.record_error(i, traceback.format_exc(limit=8))
+        if self.tl is not None:
+            self.tl.stamp(int(i), t0, time.monotonic(), self.wave)
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +479,8 @@ def execute_frontier(session: CompiledSession,
     n = pgt.num_drops
     session.start()
     if n == 0:
+        if hooks is not None and hooks.on_wave is not None:
+            hooks.on_wave(session, 0, 0)
         session.finish()
         return True
     state = session.drop_state
@@ -477,6 +509,18 @@ def execute_frontier(session: CompiledSession,
     deadline = time.monotonic() + timeout
     ctx.deadline = deadline   # enforced mid-wave too (wide Python waves)
 
+    # telemetry: wave/frontier metrics at wave granularity, per-drop
+    # stamps in the dispatch fast paths.  Resumed sessions keep wave
+    # numbers monotone by continuing past the highest stamped index.
+    tl = session.timeline
+    reg = session.metrics
+    if reg is not None:
+        from .telemetry import FRONTIER_BUCKETS
+        m_waves = reg.counter("exec.waves")
+        m_front = reg.histogram("exec.frontier_size", FRONTIER_BUCKETS)
+        ctx.m_batches = reg.counter("exec.dispatch_batches")
+    wave_no = tl.max_wave + 1 if tl is not None else 0
+
     while frontier.size:
         if time.monotonic() > deadline:
             return False
@@ -484,6 +528,11 @@ def execute_frontier(session: CompiledSession,
             # state is consistent here (all drops terminal or INIT); any
             # exception raised by the hook leaves the session resumable
             hooks.on_wave(session, n - remaining, n)
+        ctx.wave = wave_no
+        if reg is not None:
+            m_waves.inc()
+            m_front.observe(float(frontier.size))
+        wave_t0 = time.monotonic() if tl is not None else 0.0
 
         # 1. complete all ready data drops of the wave (vectorised)
         data_ids = frontier[kind[frontier] == KIND_DATA]
@@ -494,7 +543,10 @@ def execute_frontier(session: CompiledSession,
             if errs.size:
                 state[errs] = ST_ERROR
                 for i in errs.tolist():
-                    session.error_info[i] = "producer errored"
+                    session.record_error(i, "producer errored")
+            if tl is not None:
+                tl.stamp_batch(data_ids, wave_t0, time.monotonic(),
+                               wave_no)
 
         # 2. fire all runnable apps (threshold gate, then per-node batches)
         app_ids = frontier[kind[frontier] != KIND_DATA]
@@ -508,9 +560,12 @@ def execute_frontier(session: CompiledSession,
                 state[failed] = ST_ERROR
                 for i, ne, ni in zip(failed.tolist(), nerr[fail].tolist(),
                                      n_in[fail].tolist()):
-                    session.error_info[i] = (
+                    session.record_error(i, (
                         f"{ne}/{ni} inputs errored > "
-                        f"t={float(ctx.thr[i])}")
+                        f"t={float(ctx.thr[i])}"))
+                if tl is not None:
+                    tl.stamp_batch(failed, wave_t0, time.monotonic(),
+                                   wave_no)
             try:
                 ctx.dispatch(app_ids[~fail])
             except _WaveTimeout:
@@ -519,6 +574,7 @@ def execute_frontier(session: CompiledSession,
                 return False
 
         remaining -= int(frontier.size)
+        wave_no += 1
 
         # 3. advance in-degrees: one np.add.at per wave
         succ = _gather(out_indptr, out_cols, frontier)
@@ -534,6 +590,18 @@ def execute_frontier(session: CompiledSession,
             frontier = np.empty(0, dtype=np.int64)
 
     if remaining == 0:
+        if hooks is not None and hooks.on_wave is not None:
+            # final wave report: progress consumers observe completed ==
+            # total exactly once.  A hook exception here still leaves the
+            # session resumable (all drops terminal, finish() not called);
+            # the resilient loop's fired-fraction set prevents re-firing.
+            hooks.on_wave(session, n, n)
+        if reg is not None:
+            # count_nonzero on the int8 state is ~10x cheaper than a
+            # bincount (which upcasts to intp first)
+            n_err = int(np.count_nonzero(state == ST_ERROR))
+            reg.counter("exec.drops_completed").inc(n - n_err)
+            reg.counter("exec.drops_errored").inc(n_err)
         session.finish()
         return True
     return False

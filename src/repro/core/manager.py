@@ -38,6 +38,8 @@ from .engine import ExecutionReport
 from .events import EventBus
 from .logical import LogicalGraph
 from .session import CompiledSession, SessionState
+from .telemetry import (LATENCY_BUCKETS_S, MetricsRegistry,
+                        TelemetryConfig)
 from .templates import GraphTemplate, TemplateCache, structural_hash
 
 __all__ = ["AdmissionError", "SessionTicket", "EngineManager"]
@@ -57,7 +59,7 @@ class SessionTicket:
     """
 
     __slots__ = ("session_id", "template_key", "session", "future",
-                 "submitted_at", "started_at", "finished_at")
+                 "submitted_at", "started_at", "finished_at", "_accounted")
 
     def __init__(self, session_id: str, template_key: str,
                  session: CompiledSession, future: "Future[ExecutionReport]"
@@ -69,14 +71,17 @@ class SessionTicket:
         self.submitted_at = time.monotonic()
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
+        self._accounted = threading.Event()   # manager _on_done ran
 
     def result(self, timeout: Optional[float] = None) -> ExecutionReport:
         report = self.future.result(timeout)
-        # the done-callback stamps finished_at, but waiters can wake
-        # before callbacks run — stamp here too so latency is never None
-        # after result() returns
+        # the done-callback stamps finished_at, but future waiters can
+        # wake *before* callbacks run — stamp here too so latency is
+        # never None, and wait for the manager's accounting callback so
+        # stats()/metrics are consistent once result() has returned
         if self.finished_at is None:
             self.finished_at = time.monotonic()
+        self._accounted.wait(timeout=5.0)
         return report
 
     def done(self) -> bool:
@@ -118,7 +123,8 @@ class EngineManager:
                  max_templates: int = 8,
                  max_concurrent: int = 4,
                  max_pending: int = 64,
-                 keep_finished: int = 32) -> None:
+                 keep_finished: int = 32,
+                 telemetry: Optional[TelemetryConfig] = None) -> None:
         if max_concurrent < 1:
             raise ValueError("max_concurrent must be >= 1")
         if max_pending < 0:
@@ -129,7 +135,20 @@ class EngineManager:
         self.dop = dop
         self.algorithm = algorithm
         self.deadline = deadline
-        self.templates = TemplateCache(max_templates)
+        self.telemetry = telemetry if telemetry is not None \
+            else TelemetryConfig()
+        self.metrics = MetricsRegistry() if self.telemetry.metrics else None
+        if self.metrics is not None:
+            # pre-created handles: submit/_on_done touch metric locks
+            # only, never the registry dict
+            self._m_submitted = self.metrics.counter("manager.submitted")
+            self._m_rejected = self.metrics.counter("manager.rejected")
+            self._m_completed = self.metrics.counter("manager.completed")
+            self._m_failed = self.metrics.counter("manager.failed")
+            self._m_queue = self.metrics.gauge("manager.queue_depth")
+            self._m_latency = self.metrics.histogram(
+                "manager.session_latency_s", LATENCY_BUCKETS_S)
+        self.templates = TemplateCache(max_templates, metrics=self.metrics)
         self.max_concurrent = max_concurrent
         self.max_pending = max_pending
         self.keep_finished = keep_finished
@@ -193,6 +212,8 @@ class EngineManager:
         if not acquired:
             with self._lock:
                 self.stats_counters["rejected"] += 1
+            if self.metrics is not None:
+                self._m_rejected.inc()
             raise AdmissionError(
                 f"admission queue full ({self.max_concurrent} running + "
                 f"{self.max_pending} pending)")
@@ -204,6 +225,9 @@ class EngineManager:
                     session_id = (f"svc-{self._session_counter}-"
                                   f"{uuid.uuid4().hex[:6]}")
             session = template.materialize(session_id, master=self.master)
+            if self.telemetry.timeline:
+                session.enable_timeline()
+            session.metrics = self.metrics
             if inputs:
                 for uid, value in inputs.items():
                     session.write(uid, value)
@@ -216,6 +240,9 @@ class EngineManager:
         with self._lock:
             self._tickets[session_id] = ticket
             self.stats_counters["submitted"] += 1
+        if self.metrics is not None:
+            self._m_submitted.inc()
+            self._m_queue.inc()
 
         def _on_done(fut: "Future[ExecutionReport]",
                      t: SessionTicket = ticket) -> None:
@@ -227,6 +254,13 @@ class EngineManager:
             with self._lock:
                 self.stats_counters["failed" if failed else "completed"] += 1
                 self._finished_order.append(t.session_id)
+            if self.metrics is not None:
+                self._m_queue.dec()
+                (self._m_failed if failed else self._m_completed).inc()
+                lat = t.latency
+                if lat is not None:
+                    self._m_latency.observe(lat)
+            t._accounted.set()
             self._evict_finished()
 
         future.add_done_callback(_on_done)
@@ -308,6 +342,8 @@ class EngineManager:
             out: Dict[str, Any] = dict(self.stats_counters)
             out["open_sessions"] = len(self._tickets)
         out["templates"] = self.templates.stats()
+        if self.metrics is not None:
+            out["metrics"] = self.metrics.snapshot()
         return out
 
     # -- shutdown ----------------------------------------------------------

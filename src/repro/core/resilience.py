@@ -290,6 +290,10 @@ class CompiledFaultManager:
         self.stats.recoveries += 1
         self.stats.recovered_drops += int(lost.size)
         self.stats.recovery_seconds += time.monotonic() - t0
+        if s.metrics is not None:
+            s.metrics.counter("resilience.recoveries").inc()
+            s.metrics.counter("resilience.recovered_drops").inc(
+                int(lost.size))
         return lost
 
 
@@ -366,8 +370,9 @@ class ResilientRunner:
                 if time.monotonic() > ctx.deadline:
                     raise _WaveTimeout
                 epoch = self._epoch
+                t0 = time.monotonic()
                 self._commit(ctx, int(i), *self._attempts(ctx, int(i)),
-                             epoch=epoch)
+                             epoch=epoch, t0=t0)
             return
         self._threaded_wave(ctx, ids)
 
@@ -391,7 +396,8 @@ class ResilientRunner:
             t0 = time.monotonic()
             started[i] = t0
             try:
-                self._commit(ctx, i, *self._attempts(ctx, i), epoch=epoch)
+                self._commit(ctx, i, *self._attempts(ctx, i), epoch=epoch,
+                             t0=t0)
             finally:
                 with self._lock:
                     self._inflight[node] = self._inflight.get(node, 1) - 1
@@ -406,8 +412,10 @@ class ResilientRunner:
                 for i in batch.tolist():
                     if time.monotonic() > ctx.deadline:
                         raise _WaveTimeout
+                    t0 = time.monotonic()
                     self._commit(ctx, int(i),
-                                 *self._attempts(ctx, int(i)), epoch=epoch)
+                                 *self._attempts(ctx, int(i)), epoch=epoch,
+                                 t0=t0)
                 continue
             with self._lock:
                 self._inflight[node] = \
@@ -463,11 +471,15 @@ class ResilientRunner:
         wave_epoch = self._epoch if epoch is None else epoch
 
         def dup() -> None:
+            t0 = time.monotonic()
             try:
                 buf, err = self._attempts(ctx, i)
                 if err is None:
+                    # a winning duplicate records the node that actually
+                    # executed the drop, not its original placement
                     self._commit(ctx, i, buf, None, speculative=True,
-                                 epoch=wave_epoch)
+                                 epoch=wave_epoch, t0=t0,
+                                 node=ctx.pgt.node_id_for(target.name))
                 else:
                     with self._lock:
                         self.stats.speculative_losses += 1
@@ -498,18 +510,26 @@ class ResilientRunner:
                     with self._lock:
                         self.stats.retries += 1
                         ctx.s.retries += 1
+                    if ctx.s.metrics is not None:
+                        ctx.s.metrics.counter("resilience.retries").inc()
                     if backoff:          # no sleep after the final attempt
                         time.sleep(backoff * (2 ** k))
         return None, err
 
     def _commit(self, ctx, i: int, buf, err: Optional[str],
-                speculative: bool = False, epoch: int = 0) -> bool:
+                speculative: bool = False, epoch: int = 0,
+                t0: Optional[float] = None,
+                node: Optional[int] = None) -> bool:
         """First-writer-wins commit into the payload table + state row.
 
         ``epoch`` is the runner epoch captured when the attempt started;
         a recovery in between (``invalidate()``) makes the buffer stale
         — the drop was reset to INIT for *re-execution*, and committing
-        would hide it from the resumed scheduler's frontier."""
+        would hide it from the resumed scheduler's frontier.
+
+        ``t0``/``node`` feed the session timeline: the *winning* attempt
+        stamps its own start time and executing node (a speculative win
+        records the duplicate's node, not the original placement)."""
         s = ctx.s
         with self._lock:
             if epoch != self._epoch or s.drop_state[i] != ST_INIT:
@@ -524,16 +544,29 @@ class ResilientRunner:
                     # payload mkdir/pickle) become drop ERRORs, exactly
                     # as the plain dispatch path records them
                     s.drop_state[i] = ST_ERROR
-                    s.error_info[int(i)] = traceback.format_exc(limit=8)
+                    s.record_error(i, traceback.format_exc(limit=8))
+                    self._stamp(ctx, i, t0, node)
                     return True
                 s.drop_state[i] = ST_COMPLETED
                 if speculative:
                     self.stats.speculative_wins += 1
                     s.speculative_wins += 1
+                    if s.metrics is not None:
+                        s.metrics.counter(
+                            "resilience.speculative_wins").inc()
             else:
                 s.drop_state[i] = ST_ERROR
-                s.error_info[int(i)] = err
+                s.record_error(i, err)
+            self._stamp(ctx, i, t0, node)
         return True
+
+    @staticmethod
+    def _stamp(ctx, i: int, t0: Optional[float],
+               node: Optional[int]) -> None:
+        if ctx.tl is not None:
+            t1 = time.monotonic()
+            ctx.tl.stamp(int(i), t1 if t0 is None else t0, t1,
+                         ctx.wave, node=node)
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from .drop import AppDrop, DataDrop, Drop, DropState, MemoryPayload
-from .events import EventBus
+from .events import Event, EventBus
 from .pgt import KIND_DATA, CompiledPGT
 from .util import safe_uid as _safe
 
@@ -313,6 +313,11 @@ class CompiledSession:
         self.node_slices: Dict[str, np.ndarray] = {}
         self.cross_node_edges = 0          # stat recorded at deploy
         self.closed = False                # close() frees the payload table
+        # telemetry (both None unless enabled — TelemetryConfig default
+        # must allocate nothing): per-drop Timeline arrays + the shared
+        # MetricsRegistry the scheduler/resilience layers update
+        self.timeline = None               # .telemetry.Timeline | None
+        self.metrics = None                # .telemetry.MetricsRegistry | None
         # resilience counters (maintained by core.resilience; always
         # present so monitoring code can read them unconditionally)
         self.recoveries = 0                # node-failure recovery passes
@@ -329,14 +334,46 @@ class CompiledSession:
         self.payload_kind = gpk[gidx] if len(pgt.groups) else \
             np.zeros(n, dtype=np.int8)
 
+    # -- telemetry ---------------------------------------------------------
+    def enable_timeline(self) -> None:
+        """Allocate the per-drop timeline arrays (idempotent).  Kept as
+        an explicit opt-in so default sessions pay nothing — 4 extra
+        arrays is 280 MB at the 10M-drop tier."""
+        if self.timeline is None:
+            from .telemetry import Timeline
+            self.timeline = Timeline(self)
+
+    def record_error(self, idx: int, msg: str) -> None:
+        """Record a drop failure: error_info + a ``dropFailed`` event on
+        the session bus (traceback last line as summary) — the compiled
+        engine's bridge to ``RecordingListener``-style tooling."""
+        i = int(idx)
+        self.error_info[i] = msg
+        lines = [ln for ln in msg.strip().splitlines() if ln.strip()]
+        summary = lines[-1][:200] if lines else ""
+        self.bus.publish(Event("dropFailed", self.pgt.uid_of(i),
+                               {"session": self.session_id,
+                                "summary": summary}))
+
     # -- lifecycle ---------------------------------------------------------
     def deploy(self) -> None:
         self.state = SessionState.DEPLOYING
 
     def start(self) -> None:
+        # publish only on the *first* transition to RUNNING — fault
+        # recovery resumes via reopen()+execute_frontier and must not
+        # produce duplicate sessionStarted events
+        if self.state is not SessionState.RUNNING:
+            self.bus.publish(Event("sessionStarted", self.session_id,
+                                   {"num_drops": self.num_drops}))
         self.state = SessionState.RUNNING
 
     def finish(self) -> None:
+        n_err = len(self.error_info)
+        self.bus.publish(Event(
+            "sessionFailed" if n_err else "sessionFinished",
+            self.session_id,
+            {"num_drops": self.num_drops, "errors": n_err}))
         self.state = SessionState.FINISHED
         self._finished.set()
 

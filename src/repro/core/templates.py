@@ -207,7 +207,8 @@ class TemplateCache:
     duplicate is discarded, which is wasteful but correct.
     """
 
-    def __init__(self, max_templates: int = 8) -> None:
+    def __init__(self, max_templates: int = 8,
+                 metrics: Optional[Any] = None) -> None:
         if max_templates < 1:
             raise ValueError("max_templates must be >= 1")
         self.max_templates = max_templates
@@ -216,6 +217,14 @@ class TemplateCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional MetricsRegistry mirror of the counters above (the
+        # ints stay authoritative — stats() reads them either way)
+        if metrics is not None:
+            self._m_hits = metrics.counter("templates.hits")
+            self._m_misses = metrics.counter("templates.misses")
+            self._m_evictions = metrics.counter("templates.evictions")
+        else:
+            self._m_hits = self._m_misses = self._m_evictions = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -231,6 +240,8 @@ class TemplateCache:
                 self._entries.move_to_end(key)
                 self.hits += 1
                 tpl.hits += 1
+                if self._m_hits is not None:
+                    self._m_hits.inc()
             return tpl
 
     def insert(self, tpl: GraphTemplate) -> GraphTemplate:
@@ -243,9 +254,13 @@ class TemplateCache:
                 return cached
             self._entries[key] = tpl
             self.misses += 1
+            if self._m_misses is not None:
+                self._m_misses.inc()
             while len(self._entries) > self.max_templates:
                 self._entries.popitem(last=False)
                 self.evictions += 1
+                if self._m_evictions is not None:
+                    self._m_evictions.inc()
             return tpl
 
     def stats(self) -> Dict[str, int]:

@@ -16,30 +16,46 @@ session latency.
 CLI:
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --decode 16
   PYTHONPATH=src python -m repro.launch.serve --sessions 8 --concurrent 4
+  PYTHONPATH=src python -m repro.launch.serve --sessions 8 \
+      --stats-json results/serve_stats.json   # registry snapshot dump
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
-from typing import Any, Dict, List
+from pathlib import Path
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import EngineManager, Pipeline, register_app
+from ..core import (EngineManager, Pipeline, TelemetryConfig,
+                    register_app)
 from ..dsl import GraphBuilder
 from ..models import model as M
 from ..models.common import ArchConfig
 from ..train import make_decode_step, make_prefill_step
 
 
+def _dump_stats(path: str, payload: Dict[str, Any]) -> None:
+    """Write the observability dump (--stats-json): the MetricsRegistry
+    snapshot plus whatever serving stats the caller collected."""
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as fh:
+        json.dump(payload, fh, indent=2, default=repr)
+    print(f"[serve] stats written to {p}")
+
+
 def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
                 microbatch: int = 4, prompt_len: int = 32,
                 decode_steps: int = 16, num_nodes: int = 2,
-                sessions: int = 1, max_concurrent: int = 4
+                sessions: int = 1, max_concurrent: int = 4,
+                stats_json: Optional[str] = None
                 ) -> Dict[str, Any]:
     assert num_requests % microbatch == 0
     n_micro = num_requests // microbatch
@@ -109,9 +125,12 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
                              num_nodes=num_nodes,
                              max_concurrent=max_concurrent,
                              num_requests=num_requests,
-                             decode_steps=decode_steps)
+                             decode_steps=decode_steps,
+                             stats_json=stats_json)
 
-    with Pipeline(num_nodes=num_nodes, workers_per_node=2) as p:
+    telemetry = TelemetryConfig(metrics=True) if stats_json else None
+    with Pipeline(num_nodes=num_nodes, workers_per_node=2,
+                  telemetry=telemetry) as p:
         p.translate(g.graph())
         p.deploy()
         t0 = time.monotonic()
@@ -119,6 +138,13 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
         wall = time.monotonic() - t0
         assert rep.ok, rep.errors[:3]
         out = p.session.drops["responses"].read()
+        if stats_json:
+            _dump_stats(stats_json, {
+                "metrics": p.metrics.snapshot() if p.metrics else {},
+                "spans": [{"name": s.name, "seconds": s.duration}
+                          for s in p.spans],
+                "wall_s": wall,
+            })
     gen_tokens = num_requests * decode_steps
     result = {
         "responses_shape": tuple(out.shape),
@@ -134,13 +160,16 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
 
 def _run_sessions(lg, *, sessions: int, num_nodes: int,
                   max_concurrent: int, num_requests: int,
-                  decode_steps: int) -> Dict[str, Any]:
+                  decode_steps: int,
+                  stats_json: Optional[str] = None) -> Dict[str, Any]:
     """Serve one graph shape ``sessions`` times through a resident
     EngineManager: one cold translate+map, then cache-hit sessions that
     share node pools and run up to ``max_concurrent`` at once."""
+    telemetry = TelemetryConfig(metrics=True) if stats_json else None
     with EngineManager(num_nodes=num_nodes, workers_per_node=2,
                        max_concurrent=max_concurrent,
-                       max_pending=sessions) as mgr:
+                       max_pending=sessions,
+                       telemetry=telemetry) as mgr:
         t0 = time.monotonic()
         tickets = [mgr.submit(lg, inputs={"reqs": num_requests},
                               timeout=3600, block=True)
@@ -152,6 +181,8 @@ def _run_sessions(lg, *, sessions: int, num_nodes: int,
         out = tickets[-1].session.read("responses")
         lats = sorted(t.latency for t in tickets)
         stats = mgr.stats()
+        if stats_json:
+            _dump_stats(stats_json, stats)
     gen_tokens = sessions * num_requests * decode_steps
     result = {
         "responses_shape": tuple(out.shape),
@@ -186,12 +217,16 @@ def main() -> None:
                          "first)")
     ap.add_argument("--concurrent", type=int, default=4,
                     help="max concurrent sessions when --sessions > 1")
+    ap.add_argument("--stats-json", type=str, default=None,
+                    help="enable the metrics registry and dump its "
+                         "snapshot (plus serving stats) to this path")
     args = ap.parse_args()
     cfg = get_smoke_config("codeqwen15_7b")
     run_serving(cfg, num_requests=args.requests,
                 microbatch=args.microbatch, prompt_len=args.prompt,
                 decode_steps=args.decode, sessions=args.sessions,
-                max_concurrent=args.concurrent)
+                max_concurrent=args.concurrent,
+                stats_json=args.stats_json)
 
 
 if __name__ == "__main__":
