@@ -53,9 +53,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import (FailureScript, GraphTemplate, Pipeline,
-                        ResilienceConfig, execute_frontier,
-                        export_chrome_trace, make_cluster)
+from repro.core import (EngineConfig, FailureScript, GraphTemplate,
+                        Pipeline, ResilienceConfig, StreamConfig,
+                        TelemetryConfig, execute_frontier,
+                        export_chrome_trace, make_cluster, register_app)
 from repro.dsl import GraphBuilder
 
 
@@ -97,8 +98,8 @@ def run_tier(target_drops: int, execution: str,
              timeout: float = 600.0) -> Dict[str, float]:
     width = max(target_drops // DROPS_PER_WIDTH, 1)
     lg = make_lg(width)
-    with Pipeline(num_nodes=4, workers_per_node=8, dop=64,
-                  execution=execution) as p:
+    with Pipeline(EngineConfig(num_nodes=4, workers_per_node=8, dop=64,
+                               execution=execution)) as p:
         p.translate(lg)            # same array translate for both modes
         rss_translate = peak_rss_mb()
         t0 = time.monotonic()
@@ -162,8 +163,8 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
     clean_walls: List[float] = []
     n = 0
     for _ in range(repeats):
-        with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
-                      execution="compiled") as p:
+        with Pipeline(EngineConfig(num_nodes=num_nodes, workers_per_node=8,
+                                   dop=64, execution="compiled")) as p:
             deploy_mapped(p)
             rep = p.execute(timeout=timeout, inputs={"src": 1})
             assert rep.ok, (rep.state, rep.errors[:3])
@@ -175,8 +176,8 @@ def run_recovery_tier(target_drops: int, num_nodes: int = 8,
     resilient_walls: List[float] = []
     recovered = 0
     for rep_i in range(repeats + 1):
-        with Pipeline(num_nodes=num_nodes, workers_per_node=8, dop=64,
-                      execution="compiled") as p:
+        with Pipeline(EngineConfig(num_nodes=num_nodes, workers_per_node=8,
+                                   dop=64, execution="compiled")) as p:
             deploy_mapped(p)
             p.resilience = ResilienceConfig(
                 failures=[FailureScript(victim, at_fraction=at_fraction)])
@@ -300,6 +301,141 @@ def run_telemetry_tier(target_drops: int, repeats: Optional[int] = None,
     }
 
 
+STREAM_CHUNKS = 8          # chunks per stream in the streaming tier
+STREAM_DT = 0.002          # per-chunk produce/consume work (seconds)
+
+
+def make_stream_lg(width: int, chunks: int):
+    """``width`` independent prefill -> decode-shaped chains: each
+    producer emits ``chunks`` chunks onto a streaming edge consumed by a
+    chunk handler — the overlap-measurement workload."""
+    g = GraphBuilder(f"stream{width}")
+    g.data("src")
+    with g.scatter("sc", width):
+        g.component("prod", app="bench/stream-prod", time=0.0)
+        g.data("d")
+        g.component("cons", app="bench/stream-cons", time=0.0)
+        g.data("d2")
+    with g.gather("ga", width):
+        g.component("r", app="noop", time=0.0)
+    g.data("out")
+    g.chain("src", "prod", "d")
+    g.connect("d", "cons", streaming=True)
+    g.chain("cons", "d2", "r", "out")
+    return g.graph()
+
+
+def _interval_union(starts: np.ndarray, ends: np.ndarray) -> List[tuple]:
+    order = np.argsort(starts)
+    merged: List[tuple] = []
+    for s, e in zip(starts[order], ends[order]):
+        if merged and s <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+        else:
+            merged.append((float(s), float(e)))
+    return merged
+
+
+def overlap_fraction(chunk_rows: np.ndarray, prod_starts: np.ndarray,
+                     prod_ends: np.ndarray) -> float:
+    """Fraction of consumer chunk-processing time spent while at least
+    one streaming producer was still executing."""
+    union = _interval_union(prod_starts, prod_ends)
+    total = 0.0
+    inside = 0.0
+    for _idx, _seq, t0, t1 in chunk_rows:
+        total += t1 - t0
+        for s, e in union:
+            lo, hi = max(t0, s), min(t1, e)
+            if hi > lo:
+                inside += hi - lo
+    return inside / total if total > 0 else 0.0
+
+
+def run_streaming_tier(target_drops: int, repeats: int = 3,
+                       chunks: int = STREAM_CHUNKS,
+                       timeout: float = 600.0) -> Dict[str, float]:
+    """Chunk-granular streaming on the compiled engine: ``width``
+    producer->consumer chains where each producer emits ``chunks``
+    chunks.  The headline metric is ``overlap_fraction`` — the share of
+    chunk-processing time overlapping producer execution (1.0 = fully
+    pipelined, 0.0 = strict batch behaviour); median over ``repeats``
+    runs, floor-gated in ``results/baseline.json`` (≥ 0.3 required).
+    The last run's Perfetto trace (with per-chunk slices) lands in
+    ``results/traces/`` for the CI artifact."""
+    width = max(target_drops // DROPS_PER_WIDTH, 1)
+
+    @register_app("bench/stream-prod")
+    def stream_prod(inputs, outputs, app):
+        for i in range(chunks):
+            time.sleep(STREAM_DT)      # per-chunk production work
+            for o in outputs:
+                o.write(i)
+
+    def _cons_finish(inputs, outputs, app):
+        for o in outputs:
+            o.write(app.scratch.get("n", 0))
+
+    @register_app("bench/stream-cons", streaming=True, finish=_cons_finish)
+    def stream_cons(value, app):
+        time.sleep(STREAM_DT)          # per-chunk consumption work
+        app.scratch["n"] = app.scratch.get("n", 0) + 1
+
+    lg = make_stream_lg(width, chunks)
+    overlaps: List[float] = []
+    walls: List[float] = []
+    n = 0
+    n_chunks = 0
+    trace_path = None
+    trace = {"events": 0, "slices": 0}
+    for _ in range(repeats):
+        cfg = EngineConfig(
+            num_nodes=4, workers_per_node=8, dop=64, execution="compiled",
+            stream=StreamConfig(ring_capacity=max(chunks, 4)),
+            telemetry=TelemetryConfig(timeline=True, metrics=True))
+        with Pipeline(cfg) as p:
+            p.translate(lg)
+            p.deploy()
+            rep = p.execute(timeout=timeout, inputs={"src": 1})
+            assert rep.ok, (rep.state, rep.errors[:3])
+            n = sum(rep.status_counts.values())
+            session = p.session
+            tbl = session.stream
+            assert tbl is not None and tbl.n_edges == width, \
+                "streaming tier must run through the chunk lane"
+            tl = session.timeline
+            chunk_rows = tl.chunk_spans()
+            n_chunks = len(chunk_rows)
+            assert n_chunks == width * chunks, \
+                (n_chunks, width * chunks)
+            # producers = apps feeding ring sources (not chunk handlers)
+            pgt = session.pgt
+            prod = np.zeros(len(pgt), dtype=bool)
+            prod[pgt.edge_src[tbl.is_src[pgt.edge_dst]]] = True
+            t0s, t1s = tl.t_start[prod], tl.t_end[prod]
+            done = t1s > 0
+            overlaps.append(
+                overlap_fraction(chunk_rows, t0s[done], t1s[done]))
+            walls.append(rep.wall_time)
+            TRACES_DIR.mkdir(parents=True, exist_ok=True)
+            trace_path = TRACES_DIR / f"trace_streaming_{target_drops}.json"
+            trace = p.export_trace(str(trace_path))
+    return {
+        "tier": target_drops,
+        "mode": "streaming",
+        "drops": n,
+        "streams": width,
+        "chunks_per_stream": chunks,
+        "chunks_total": n_chunks,
+        "execute_s": round(statistics.median(walls), 4),
+        "overlap_fraction": round(statistics.median(overlaps), 4),
+        "trace_file": str(trace_path),
+        "trace_events": trace["events"],
+        "trace_slices": trace["slices"],
+        "rss_mb_peak": peak_rss_mb(),
+    }
+
+
 DEFAULT_MAX_OBJECT_DROPS = 100_000   # objects cost ~100us+/drop; 1M would
 #                                      take minutes and gigabytes
 
@@ -328,6 +464,14 @@ def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
             print(f"execute_recovery_s[n={r['drops']}],{r['recovery_s']},"
                   f"recovered={r['recovered_drops']};"
                   f"frac_of_execute={r['recovery_frac_of_execute']}")
+            continue
+        if r["mode"] == "streaming":
+            print(f"execute_streaming_overlap[n={r['drops']}],"
+                  f"{r['overlap_fraction']},"
+                  f"streams={r['streams']};"
+                  f"chunks={r['chunks_total']};"
+                  f"execute_s={r['execute_s']};"
+                  f"trace={r['trace_file']}")
             continue
         if r["mode"] == "telemetry":
             print(f"execute_telemetry_overhead_pct[n={r['drops']}],"
@@ -363,9 +507,10 @@ def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--tier", choices=["standard", "recovery"],
+    ap.add_argument("--tier", choices=["standard", "recovery", "streaming"],
                     default="standard",
-                    help="'recovery' = node-kill + lineage-recovery suite")
+                    help="'recovery' = node-kill + lineage-recovery suite; "
+                         "'streaming' = chunk-lane overlap measurement")
     ap.add_argument("--tiers", type=int, nargs="+", default=None,
                     help="target drop counts")
     ap.add_argument("--max-object-drops", type=int,
@@ -383,6 +528,9 @@ def main() -> None:
     elif args.tier == "recovery":
         tiers = tuple(args.tiers or [100_000])
         emit([run_recovery_tier(t) for t in tiers], merge=True)
+    elif args.tier == "streaming":
+        tiers = tuple(args.tiers or [1_000])
+        emit([run_streaming_tier(t) for t in tiers], merge=True)
     else:
         tiers = tuple(args.tiers or [1_000, 10_000, 100_000])
         emit(run(tiers, args.max_object_drops), merge=True)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import time
 from typing import List, Tuple
 
-from repro.core import Pipeline
+from repro.core import EngineConfig, Pipeline
 from repro.dsl import GraphBuilder
 
 
@@ -37,9 +37,9 @@ def run(widths=(100, 500, 2000), islands=(1, 2), nodes=4,
             best = float("inf")
             drops = 0
             for _ in range(repeats):
-                with Pipeline(num_nodes=nodes, num_islands=isl,
-                              workers_per_node=8,
-                              algorithm="none") as p:
+                with Pipeline(EngineConfig(
+                        num_nodes=nodes, num_islands=isl,
+                        workers_per_node=8, algorithm="none")) as p:
                     rep = p.run(make_graph(width), timeout=300)
                     assert rep.ok, rep.errors[:2]
                     drops = sum(rep.status_counts.values())

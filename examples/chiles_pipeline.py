@@ -15,7 +15,7 @@ Run:  PYTHONPATH=src python examples/chiles_pipeline.py
 """
 import numpy as np
 
-from repro.core import Pipeline, register_app
+from repro.core import EngineConfig, Pipeline, register_app
 from repro.dsl import GraphBuilder
 
 DAYS = 4
@@ -81,7 +81,7 @@ def main() -> None:
     lgt = build_template()
     lg = lgt.parametrise(days=DAYS, bands=BANDS)
 
-    with Pipeline(num_nodes=4, num_islands=2, dop=8) as p:
+    with Pipeline(EngineConfig(num_nodes=4, num_islands=2, dop=8)) as p:
         pgt = p.translate(lg)
         print(f"PGT: {len(pgt)} drops, {len(pgt.edges)} edges")
         p.deploy()

@@ -5,7 +5,7 @@ The six-stage DALiuGE pipeline (paper Fig. 1) on a toy reduction:
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import Pipeline, register_app
+from repro.core import EngineConfig, Pipeline, register_app
 from repro.dsl import GraphBuilder
 
 
@@ -51,7 +51,7 @@ def main() -> None:
     lg = g.lgt.parametrise(width=8)
 
     # Stages 4-6: translate -> deploy -> execute
-    with Pipeline(num_nodes=2, num_islands=1, dop=4) as p:
+    with Pipeline(EngineConfig(num_nodes=2, num_islands=1, dop=4)) as p:
         pgt = p.translate(lg)
         print(f"unrolled {len(pgt)} drops / {len(pgt.edges)} edges "
               f"into {len({s.partition for s in pgt.drops.values()})} "

@@ -169,10 +169,33 @@ def telemetry_ceilings(path: Path) -> Dict[str, float]:
     return out
 
 
+def streaming_metrics(path: Path) -> Dict[str, float]:
+    """Floor metrics from bench_execute streaming rows:
+    ``execute:streaming:<tier>:overlap_fraction`` — the share of
+    consumer chunk-processing time overlapping producer execution.
+    Higher is better; the committed floor enforces the ISSUE 9 bar of
+    ≥ 0.3 effective overlap (floor x (1 - tolerance))."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if r.get("mode") != "streaming" or "overlap_fraction" not in r:
+            continue
+        try:
+            out[f"execute:streaming:{r['tier']}:overlap_fraction"] = \
+                float(r["overlap_fraction"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
+
+
 def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
     out = execute_metrics(results_dir / "bench_execute.json")
     out.update(translate_metrics(results_dir / "bench_translate.json"))
     out.update(serve_metrics(results_dir / "bench_serve.json"))
+    out.update(streaming_metrics(results_dir / "bench_execute.json"))
     return out
 
 

@@ -35,6 +35,8 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/bench_execute.py --tier recovery --tiers 10000
     echo "== telemetry overhead bench (100k + 1M, exports Perfetto traces) =="
     python benchmarks/bench_execute.py --telemetry --tiers 100000 1000000
+    echo "== streaming overlap bench (chunk lane; exports Perfetto trace) =="
+    python benchmarks/bench_execute.py --tier streaming --tiers 1000
     echo "== serve smoke bench (10k drops, resident manager sessions/s) =="
     python benchmarks/bench_serve.py --tiers 10000
     echo "== bench-regression gate (results vs results/baseline.json) =="

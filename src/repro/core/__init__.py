@@ -4,6 +4,7 @@ Public surface: Drops, constructs, logical graphs, translation
 (unroll+partition), mapping, managers, sessions, the engine facade,
 fault handling and data lifecycle management.
 """
+from .config import EngineConfig
 from .constructs import Construct, Kind, LogicalEdge
 from .drop import (AppDrop, AppState, DataDrop, Drop, DropState, FilePayload,
                    MemoryPayload, NullPayload, Payload, PayloadError)
@@ -27,6 +28,7 @@ from .schedule import critical_path, partition_stats, simulate_makespan
 from .pgt import CompiledPGT, DropView
 from .session import (CompiledDropRef, CompiledSession, Session,
                       SessionState)
+from .streaming import StreamAbort, StreamConfig, StreamTable
 from .telemetry import (MetricsRegistry, Span, TelemetryConfig, Timeline,
                         export_chrome_trace)
 from .templates import (GraphTemplate, TemplateCache, structural_hash,
@@ -38,8 +40,8 @@ __all__ = [
     "AdmissionError", "AppDrop", "AppState", "Axis", "CompiledDropRef",
     "CompiledFaultManager", "CompiledPGT", "CompiledSession", "Construct",
     "DataDrop", "DataIslandDropManager", "DataLifecycleManager", "Drop",
-    "DropSpec", "DropState", "DropView", "EngineManager", "Event",
-    "EventBus", "ExecHooks", "ExecutionReport", "FailureScript",
+    "DropSpec", "DropState", "DropView", "EngineConfig", "EngineManager",
+    "Event", "EventBus", "ExecHooks", "ExecutionReport", "FailureScript",
     "FaultManager", "FilePayload", "GraphTemplate", "GraphValidationError",
     "Kind", "LogicalEdge", "LogicalGraph", "LogicalGraphTemplate",
     "MasterDropManager", "MemoryPayload", "MetricsRegistry",
@@ -48,7 +50,8 @@ __all__ = [
     "PhysicalGraphTemplate", "Pipeline", "RecordingListener",
     "ResilienceConfig", "ResilienceStats", "ResilientRunner", "RetryPolicy",
     "Session", "SessionState", "SessionTicket", "Span", "StragglerPolicy",
-    "StragglerWatcher", "TelemetryConfig", "TemplateCache", "Timeline",
+    "StragglerWatcher", "StreamAbort", "StreamConfig", "StreamTable",
+    "TelemetryConfig", "TemplateCache", "Timeline",
     "compile_unroll", "critical_path",
     "elastic_remap", "execute_frontier", "execute_resilient",
     "export_chrome_trace", "get_app",

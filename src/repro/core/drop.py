@@ -309,6 +309,7 @@ class DataDrop(Drop):
         self.streaming_consumers: List["AppDrop"] = []
         self._finished_producers = 0
         self._errored_producers = 0
+        self._chunk_seq = 0          # chunks written (streaming fan-out)
 
     # -- graph wiring ----------------------------------------------------------
     def add_producer(self, app: "AppDrop") -> None:
@@ -332,8 +333,14 @@ class DataDrop(Drop):
                 f"cannot write drop {self.uid} in state {self.state}")
         self._set_state(DropState.WRITING)
         self.payload.write(value)
-        for sc in self.streaming_consumers:
-            sc.on_stream_chunk(self, value)
+        if self.streaming_consumers:
+            seq = self._chunk_seq
+            self._chunk_seq = seq + 1
+            for sc in self.streaming_consumers:
+                sc.on_stream_chunk(self, value)
+                # one event per delivery: the hooks bridge
+                # (Pipeline.execute on_stream_chunk) subscribes to these
+                self.fire("streamChunk", consumer=sc.uid, seq=seq)
 
     def read(self) -> Any:
         if self.state in (DropState.EXPIRED, DropState.DELETED):
@@ -422,6 +429,10 @@ class AppDrop(Drop):
         super().__init__(uid, **kw)
         self.func = func
         self.error_threshold = float(error_threshold)   # t in the paper
+        # per-drop scratch for streaming chunk handlers (cross-chunk
+        # accumulation between on_stream_chunk calls; the compiled
+        # engine's _StreamAppRef mirrors it)
+        self.scratch: Dict[str, Any] = {}
         self.inputs: List[DataDrop] = []
         self.streaming_inputs: List[DataDrop] = []
         self.outputs: List[DataDrop] = []
@@ -490,7 +501,16 @@ class AppDrop(Drop):
                 # deterministic input order regardless of wiring order
                 # (cross-node edges are wired later by the island manager)
                 ok_inputs.sort(key=_drop_order_key)
-                self.func(ok_inputs, list(self.outputs), self)
+                if getattr(self.func, "streaming", False):
+                    # streaming-marked func: chunks were delivered via
+                    # on_stream_chunk; batch resolution runs only the
+                    # optional finalizer (§4 — the consumer completes
+                    # when its producers do)
+                    fin = getattr(self.func, "finish", None)
+                    if fin is not None:
+                        fin(ok_inputs, list(self.outputs), self)
+                else:
+                    self.func(ok_inputs, list(self.outputs), self)
             self.run_duration = time.monotonic() - t0
             self._finish_ok()
         except Exception:  # noqa: BLE001 - app failures become drop ERRORs

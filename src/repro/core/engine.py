@@ -13,9 +13,11 @@ from __future__ import annotations
 
 import time
 import uuid
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from .config import EngineConfig, config_from_kwargs
 from .fault import FaultManager, StragglerWatcher
 from .lifecycle import DataLifecycleManager
 from .logical import LogicalGraph, LogicalGraphTemplate
@@ -68,53 +70,49 @@ class Pipeline:
       objects and are rejected.
     """
 
-    def __init__(self, num_nodes: int = 2, num_islands: int = 1,
-                 workers_per_node: int = 4, dop: int = 8,
-                 algorithm: str = "min_time",
-                 deadline: Optional[float] = None,
-                 enable_dlm: bool = False,
-                 enable_stragglers: bool = False,
-                 execution: str = "objects",
-                 resilience: Optional[ResilienceConfig] = None,
-                 manager: Any = None,
-                 telemetry: Optional[TelemetryConfig] = None) -> None:
-        if execution not in ("objects", "compiled"):
-            raise ValueError(f"unknown execution mode {execution!r}")
-        if execution == "compiled" and (enable_dlm or enable_stragglers):
-            raise ValueError(
-                "compiled execution has no per-drop objects; DLM and "
-                "straggler services need execution='objects'")
-        if resilience is not None and execution != "compiled":
-            raise ValueError(
-                "resilience= is the compiled-path subsystem "
-                "(core.resilience); the object path uses "
-                "enable_stragglers / FaultManager (core.fault)")
+    def __init__(self, config: Optional[EngineConfig] = None,
+                 **legacy: Any) -> None:
+        if config is not None:
+            if legacy:
+                raise TypeError(
+                    "pass either an EngineConfig or legacy keyword "
+                    "arguments, not both")
+            if not isinstance(config, EngineConfig):
+                raise TypeError(
+                    f"config must be an EngineConfig, got "
+                    f"{type(config).__name__}")
+            config.validate()
+        else:
+            if legacy:
+                warnings.warn(
+                    "Pipeline(**kwargs) is deprecated; pass "
+                    "Pipeline(EngineConfig(...)) (repro.core.config)",
+                    DeprecationWarning, stacklevel=2)
+            config = config_from_kwargs(**legacy)
+        self.config = config
+        manager = config.manager
         if manager is not None:
             # ride a resident EngineManager: shared cluster + executors
             # + template cache; the Pipeline becomes a thin per-run view
-            if execution != "compiled":
-                raise ValueError(
-                    "manager= serves compiled sessions; use "
-                    "execution='compiled'")
-            if resilience is not None:
-                raise ValueError(
-                    "resilience= mutates the shared template PGT "
-                    "(node-failure remapping rewrites node_ids); run "
-                    "a standalone Pipeline for fault-injection tiers")
             self.master, self.nodes = manager.master, manager.nodes
             self._owns_cluster = False
         else:
             self.master, self.nodes = make_cluster(
-                num_nodes, num_islands, workers_per_node)
+                config.num_nodes, config.num_islands,
+                config.workers_per_node)
             self._owns_cluster = True
+        # mutable working copies — benchmarks and tests tune these on a
+        # built Pipeline (e.g. ``p.resilience = ResilienceConfig(...)``);
+        # the frozen config records what was requested at construction
         self.manager = manager
-        self.dop = dop
-        self.algorithm = algorithm
-        self.deadline = deadline
-        self.enable_dlm = enable_dlm
-        self.enable_stragglers = enable_stragglers
-        self.execution = execution
-        self.resilience = resilience
+        self.dop = config.dop
+        self.algorithm = config.algorithm
+        self.deadline = config.deadline
+        self.enable_dlm = config.enable_dlm
+        self.enable_stragglers = config.enable_stragglers
+        self.execution = config.execution
+        self.resilience = config.resilience
+        self.stream = config.stream
         self.pgt: Optional[PhysicalGraphTemplate] = None
         self._template: Optional[GraphTemplate] = None
         self.session: Optional[Session] = None
@@ -125,8 +123,8 @@ class Pipeline:
         self.map_time = 0.0        # partition->node mapping share of deploy
         # telemetry: inherit the manager's config/registry when riding a
         # resident EngineManager (one registry per service, not per run)
-        if telemetry is not None:
-            self.telemetry = telemetry
+        if config.telemetry is not None:
+            self.telemetry = config.telemetry
         elif manager is not None:
             self.telemetry = manager.telemetry
         else:
@@ -214,11 +212,27 @@ class Pipeline:
 
     # -- stage 6: execute ----------------------------------------------------------
     def execute(self, timeout: float = 60.0,
-                inputs: Optional[Dict[str, Any]] = None) -> ExecutionReport:
+                inputs: Optional[Dict[str, Any]] = None,
+                hooks: Any = None) -> ExecutionReport:
+        """Run the deployed session.
+
+        ``hooks`` (an :class:`~repro.core.exec_compiled.ExecHooks`) is
+        honoured on both substrates: the compiled engine threads it into
+        the frontier scheduler; the object engine bridges its drop-level
+        ``streamChunk`` events onto ``hooks.on_stream_chunk`` so chunk
+        observability is engine-portable.
+        """
         assert self.session is not None, "deploy() first"
         session = self.session
         if isinstance(session, CompiledSession):
-            return self._execute_compiled(session, timeout, inputs)
+            return self._execute_compiled(session, timeout, inputs, hooks)
+        on_chunk = getattr(hooks, "on_stream_chunk", None)
+        if on_chunk is not None:
+            def _bridge(event: Any) -> None:
+                if event.type == "streamChunk":
+                    on_chunk(session, event.source_uid,
+                             event.data["consumer"], event.data["seq"])
+            session.bus.subscribe_all(_bridge)
         if inputs:
             from .drop import DataDrop
             for uid, value in inputs.items():
@@ -251,8 +265,8 @@ class Pipeline:
         )
 
     def _execute_compiled(self, session: CompiledSession, timeout: float,
-                          inputs: Optional[Dict[str, Any]]
-                          ) -> ExecutionReport:
+                          inputs: Optional[Dict[str, Any]],
+                          hooks: Any = None) -> ExecutionReport:
         from .exec_compiled import execute_frontier
         if inputs:
             for uid, value in inputs.items():
@@ -261,12 +275,14 @@ class Pipeline:
         if self.resilience is not None:
             finished, stats = execute_resilient(
                 session, self.master, self.resilience, timeout=timeout,
-                fault_manager=self.fault_manager)
+                fault_manager=self.fault_manager, hooks=hooks,
+                stream=self.stream)
         else:
             executors = (self.manager.executors if self.manager is not None
                          else self.master.node_executors())
             finished = execute_frontier(
-                session, timeout=timeout, executors=executors)
+                session, timeout=timeout, hooks=hooks,
+                executors=executors, stream=self.stream)
             stats = None
         wall = time.monotonic() - t0
         self._record_span("execute", t0)
@@ -287,10 +303,11 @@ class Pipeline:
 
     # -- convenience: run everything -----------------------------------------------
     def run(self, lg: LogicalGraph, timeout: float = 60.0,
-            inputs: Optional[Dict[str, Any]] = None) -> ExecutionReport:
+            inputs: Optional[Dict[str, Any]] = None,
+            hooks: Any = None) -> ExecutionReport:
         self.translate(lg)
         self.deploy()
-        return self.execute(timeout=timeout, inputs=inputs)
+        return self.execute(timeout=timeout, inputs=inputs, hooks=hooks)
 
     def export_trace(self, path: str) -> Dict[str, int]:
         """Write the last session's Perfetto trace (timeline required);

@@ -30,28 +30,39 @@ the oracle; ``tests/test_exec_equiv.py`` enforces it):
 * payload values are write-once at wave granularity; memory payloads live
   in the session's dense table.
 
+Streaming edges run chunk-granular (PR 9): writes to a ringed source
+data drop land in per-edge chunk rings (``core/streaming.py``) and a
+dedicated consumer thread per streaming consumer processes them while
+the producer is still running — the paper's §4/Fig. 10 data-activated
+contract, previously object-engine-only.  Pure-batch subgraphs are
+untouched: the lane only exists when the graph has *active* streaming
+edges, and only stream-producing apps leave the vectorised fast paths.
+
 Deliberate divergences (documented in ``docs/execute.md``): waves run
 single-threaded (``sleep`` apps in one wave cost ``max(seconds)``, i.e.
-ideal parallelism), streaming edges are treated as batch dependencies,
-and no per-drop *success* events are published on the hot path — that is
-the point.  Observability is opt-in and array-native instead: per-drop
-timeline stamps and wave-granular metrics via ``core/telemetry.py``
-(``TelemetryConfig``), while session lifecycle and drop *failures* do
-surface on the session ``EventBus`` (see ``docs/observability.md``).
+ideal parallelism), and no per-drop *success* events are published on
+the hot path — that is the point.  Observability is opt-in and
+array-native instead: per-drop timeline stamps, chunk spans and
+wave-granular metrics via ``core/telemetry.py`` (``TelemetryConfig``),
+while session lifecycle and drop *failures* do surface on the session
+``EventBus`` (see ``docs/observability.md``).
 """
 from __future__ import annotations
 
+import threading
 import time
 import traceback
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from .managers import _APP_REGISTRY, BUILTIN_FAST_APPS, get_app
-from .pgt import (KIND_DATA, CompiledPGT, csr_gather,
+from .pgt import (KIND_APP, KIND_DATA, CompiledPGT, csr_gather,
                   csr_gather_with_counts)
 from .session import (PK_FILE, PK_NULL, ST_COMPLETED, ST_ERROR, ST_INIT,
                       CompiledDropRef, CompiledSession)
+from .streaming import StreamAbort, StreamConfig, StreamTable
 
 # per-drop dispatch codes (apps only; data drops never dispatch)
 CODE_PYTHON = 0      # registry app with real Python work
@@ -87,7 +98,9 @@ class _WaveTimeout(Exception):
 
 
 class ExecHooks:
-    """Scheduler extension points (consumed by :mod:`repro.core.resilience`).
+    """Scheduler extension points — the one hooks protocol shared by
+    ``Pipeline.execute``, :func:`execute_frontier` and
+    ``launch/serve.py`` (consumed by :mod:`repro.core.resilience` too).
 
     * ``on_wave(session, completed, total)`` — called at the top of every
       wave, when all drop state is consistent (everything terminal or
@@ -97,13 +110,25 @@ class ExecHooks:
       loop for the wave's Python apps (``ctx`` is the ``_Dispatch``;
       ``ids`` are node-sorted and may span nodes).  Must leave every id
       terminal, or raise ``_WaveTimeout`` past ``ctx.deadline``.
+    * ``on_stream_chunk(session, src_uid, dst_uid, seq)`` — one call per
+      chunk *consumed* by a streaming consumer (compiled lane) or per
+      chunk *delivered* by ``DataDrop.write`` (object engine).  Runs on
+      the consumer's thread; an exception marks that consumer ERROR.
+    * ``on_backpressure(session, src_uid, dst_uid, waited_s)`` — a
+      producer is blocked on a full chunk ring (compiled lane only; the
+      object engine delivers chunks synchronously inside ``write`` and
+      never queues them).
     """
 
-    __slots__ = ("on_wave", "python_runner")
+    __slots__ = ("on_wave", "python_runner", "on_stream_chunk",
+                 "on_backpressure")
 
-    def __init__(self, on_wave=None, python_runner=None) -> None:
+    def __init__(self, on_wave=None, python_runner=None,
+                 on_stream_chunk=None, on_backpressure=None) -> None:
         self.on_wave = on_wave
         self.python_runner = python_runner
+        self.on_stream_chunk = on_stream_chunk
+        self.on_backpressure = on_backpressure
 
 
 # shared with pgt.py (kept as module aliases — the scheduler's hot loop
@@ -150,13 +175,16 @@ class _DataRef(CompiledDropRef):
 
 class _AppRef(CompiledDropRef):
     """Duck-types the slice of ``AppDrop`` an app function consumes
-    (``app.meta`` with oid/construct/params, ``app.uid``, ``app.node``)."""
+    (``app.meta`` with oid/construct/params, ``app.uid``, ``app.node``,
+    and ``app.scratch`` — the per-drop scratch dict streaming handlers
+    use for cross-chunk accumulation, mirroring ``AppDrop.scratch``)."""
 
-    __slots__ = ("_meta",)
+    __slots__ = ("_meta", "scratch")
 
     def __init__(self, session: CompiledSession, idx: int) -> None:
         super().__init__(session, idx)
         self._meta: Optional[Dict[str, Any]] = None
+        self.scratch: Dict[str, Any] = {}
 
     @property
     def meta(self) -> Dict[str, Any]:
@@ -165,6 +193,22 @@ class _AppRef(CompiledDropRef):
             m["execution_time"] = float(self.s.pgt.exec_arr[self.idx])
             self._meta = m
         return self._meta
+
+
+class _StreamAppRef(_AppRef):
+    """The persistent app ref a streaming consumer sees across chunks.
+
+    Stored in ``StreamTable.app_refs`` so ``app.scratch`` survives
+    resumable timeouts; recovery invalidation discards it (the consumer
+    re-accumulates from the re-delivered stream).  ``outputs`` lets a
+    chunk handler emit downstream chunks incrementally."""
+
+    __slots__ = ("outputs",)
+
+    def __init__(self, session: CompiledSession, idx: int,
+                 outputs: List[_DataRef]) -> None:
+        super().__init__(session, idx)
+        self.outputs = outputs
 
 
 def _drop_meta(pgt: CompiledPGT, idx: int) -> Dict[str, Any]:
@@ -183,7 +227,8 @@ class _Dispatch:
 
     def __init__(self, session: CompiledSession,
                  hooks: Optional[ExecHooks] = None,
-                 executors: Optional[Dict[str, Any]] = None) -> None:
+                 executors: Optional[Dict[str, Any]] = None,
+                 stream_table: Optional[StreamTable] = None) -> None:
         pgt = session.pgt
         self.s = session
         self.pgt = pgt
@@ -194,8 +239,26 @@ class _Dispatch:
         self.executors = executors or {}
         n = pgt.num_drops
         self.out_indptr, self.out_cols, _ = pgt.out_csr_with_eid()
-        self.in_indptr, self.in_cols, _ = pgt.in_csr_with_eid()
+        self.in_indptr, self.in_cols, in_eid = pgt.in_csr_with_eid()
         self.in_deg = pgt.in_degrees()
+        # oracle contract: streaming inputs live in app.streaming_inputs,
+        # never in app.inputs, so they are invisible to the batch input
+        # list (AppDrop.execute builds ok_inputs from self.inputs only).
+        # This holds whether or not a chunk lane is active: in degraded
+        # (batch) mode the edge is still a dependency, just not a readable
+        # batch input.  in_stream is aligned with in_cols; stream_cons
+        # marks apps with >= 1 streaming in-edge so fast paths skip them.
+        self.in_stream: Optional[np.ndarray] = None
+        self.stream_cons: Optional[np.ndarray] = None
+        if pgt.has_streaming_edges():
+            sm = pgt.edge_streaming & \
+                (pgt.kind_arr[pgt.edge_src] == KIND_DATA) & \
+                (pgt.kind_arr[pgt.edge_dst] == KIND_APP)
+            if sm.any():
+                self.in_stream = sm[in_eid]
+                cons = np.zeros(n, dtype=bool)
+                cons[pgt.edge_dst[sm]] = True
+                self.stream_cons = cons
         gidx = pgt.group_idx_arr()
         if len(pgt.groups):
             gcode = np.fromiter(
@@ -213,6 +276,18 @@ class _Dispatch:
         # table; graphs with file-backed payloads take the per-app path so
         # spill files appear exactly as the object engine would write them
         self.fast_ok = not bool((session.payload_kind == PK_FILE).any())
+        # apps writing into ringed stream sources must take the registry
+        # path: every chunk has to go through _write_idx (the vectorised
+        # fast paths bulk-write the payload table and would skip rings)
+        self.stream = stream_table
+        if stream_table is not None and stream_table.n_edges:
+            prod = np.zeros(n, dtype=bool)
+            feeds_ring = stream_table.is_src[pgt.edge_dst]
+            if feeds_ring.any():
+                prod[pgt.edge_src[feeds_ring]] = True
+            self.stream_prod: Optional[np.ndarray] = prod
+        else:
+            self.stream_prod = None
         self.deadline = float("inf")   # set per run by execute_frontier
         # telemetry (off unless the session carries a Timeline/registry):
         # fast paths stamp whole batches, _run_python stamps per app
@@ -232,7 +307,7 @@ class _Dispatch:
         can overlap per-node batches and speculate across nodes."""
         if run_ids.size == 0:
             return
-        codes = self.app_code[run_ids]
+        codes = self.codes_of(run_ids)
         sleep_ids = run_ids[codes == CODE_SLEEP]
         if sleep_ids.size:
             self._sleep_batch(sleep_ids)
@@ -249,6 +324,21 @@ class _Dispatch:
         python_parts = [self._dispatch_batch(batch) for batch in batches]
         self._run_python_batch(np.concatenate(python_parts))
 
+    def codes_of(self, ids: np.ndarray) -> np.ndarray:
+        """Dispatch codes for a batch, with stream producers forced onto
+        the registry path (their writes must push chunks one by one)."""
+        codes = self.app_code[ids]
+        if self.stream_prod is not None:
+            codes = np.where(self.stream_prod[ids] & (codes != CODE_NONE),
+                             CODE_PYTHON, codes)
+        if self.stream_cons is not None:
+            # apps with streaming in-edges must take the registry path:
+            # the vectorised fast paths read the raw in-CSR and would
+            # treat the streaming edge as a readable batch input
+            codes = np.where(self.stream_cons[ids] & (codes != CODE_NONE),
+                             CODE_PYTHON, codes)
+        return codes
+
     def _stamp_batch(self, ids: np.ndarray, t0: float) -> None:
         """Timeline-stamp a terminal fast-path batch (end = now)."""
         if self.tl is not None and ids.size:
@@ -257,7 +347,7 @@ class _Dispatch:
     def _dispatch_batch(self, batch: np.ndarray) -> np.ndarray:
         """Run the fast-path apps of one per-node batch; return the
         registry (Python) apps for the wave-wide dispatch."""
-        codes = self.app_code[batch]
+        codes = self.codes_of(batch)
         t0 = time.monotonic() if self.tl is not None else 0.0
         none_ids = batch[codes == CODE_NONE]
         if none_ids.size:
@@ -423,7 +513,12 @@ class _Dispatch:
         func = get_app(name) if name else None
         if func is None:
             return None, [], [], None
-        ins = self.in_cols[self.in_indptr[i]:self.in_indptr[i + 1]]
+        lo, hi = self.in_indptr[i], self.in_indptr[i + 1]
+        ins = self.in_cols[lo:hi]
+        if self.in_stream is not None:
+            # streaming in-edges are dependencies, not batch inputs
+            # (the oracle keeps them in app.streaming_inputs)
+            ins = ins[~self.in_stream[lo:hi]]
         ok = ins[s.drop_state[ins] == ST_COMPLETED]
         refs = [_DataRef(s, int(j)) for j in ok]
         # deterministic input order (the object engine sorts by
@@ -439,13 +534,247 @@ class _Dispatch:
         try:
             func, refs, outs, app = self.app_call(i)
             if func is not None:
-                func(refs, outs, app)
+                if getattr(func, "streaming", False):
+                    # streaming-marked func on the batch path (streaming
+                    # disabled, or wired batch-only): chunks were never
+                    # delivered; run only the finalizer, as the object
+                    # oracle's AppDrop.execute does
+                    fin = getattr(func, "finish", None)
+                    if fin is not None:
+                        fin(refs, outs, app)
+                else:
+                    func(refs, outs, app)
             s.drop_state[i] = ST_COMPLETED
+        except _WaveTimeout:
+            raise
+        except StreamAbort:
+            # a chunk push aborted (run shutting down / past deadline):
+            # resumable, not an app failure
+            raise _WaveTimeout
         except Exception:  # noqa: BLE001 - app failures become drop ERRORs
             s.drop_state[i] = ST_ERROR
             s.record_error(i, traceback.format_exc(limit=8))
         if self.tl is not None:
             self.tl.stamp(int(i), t0, time.monotonic(), self.wave)
+
+
+# ---------------------------------------------------------------------------
+# The streaming dispatch lane
+# ---------------------------------------------------------------------------
+
+
+_degrade_warned = False   # one-time process warning (reset in tests)
+
+
+def _warn_degraded(n_edges: int) -> None:
+    global _degrade_warned
+    if not _degrade_warned:
+        _degrade_warned = True
+        warnings.warn(
+            f"{n_edges} active streaming edge(s) degraded to batch "
+            "dependencies (streaming disabled for this run); consumers "
+            "will not receive chunks — see docs/streaming.md",
+            RuntimeWarning, stacklevel=3)
+
+
+class _StreamLane:
+    """Per-run chunk-consumption lane over a session's ``StreamTable``.
+
+    One daemon thread per *activated* streaming consumer: the first
+    chunk landing in any of a consumer's rings spawns its thread, which
+    drains chunks (``func(value, app)`` per chunk) concurrently with the
+    wave loop still dispatching producers — that concurrency IS the
+    producer/consumer overlap the streaming tier measures.  When the
+    scheduler later finds the consumer frontier-ready (all inputs
+    terminal — the oracle's resolution condition), ``finalize_wave``
+    waits for the thread to drain and run the func's optional
+    ``finish(ok_inputs, outputs, app)``, leaving the drop terminal.
+
+    Run-scoped state only (threads, resolved set, first-activity
+    stamps); cursors, buffered chunks and per-consumer ``app.scratch``
+    live on the :class:`StreamTable` and survive resumable timeouts.
+    """
+
+    def __init__(self, ctx: _Dispatch, table: StreamTable) -> None:
+        self.ctx = ctx
+        self.s = ctx.s
+        self.table = table
+        self.hooks = ctx.hooks
+        self.threads: Dict[int, threading.Thread] = {}
+        self.done: Dict[int, threading.Event] = {}
+        self.resolved: set = set()
+        self.first_t0: Dict[int, float] = {}
+        self.errored: Dict[int, str] = {}
+        self.chunks_processed = 0
+        self.m_chunks = None          # Counter("exec.stream_chunks")
+        self._shutdown = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def attach(self) -> None:
+        tbl = self.table
+        on_bp = None
+        hk = self.hooks
+        if hk is not None and hk.on_backpressure is not None:
+            user_bp = hk.on_backpressure
+            pgt, s = self.ctx.pgt, self.s
+
+            def on_bp(src: int, dst: int, waited: float) -> None:
+                user_bp(s, pgt.uid_of(src), pgt.uid_of(dst), waited)
+
+        tbl.attach(self.activate, on_bp, deadline=self.ctx.deadline)
+        # resume: consumers with chunks buffered from a previous attempt
+        # start draining immediately
+        with tbl.cond:
+            pend = [d for d, ks in tbl.edges_of_dst.items()
+                    if self.s.drop_state[d] == ST_INIT
+                    and any(tbl.rcur[k] < tbl.wcur[k] for k in ks)]
+        for d in pend:
+            self.activate(d)
+
+    def shutdown(self) -> None:
+        """Stop consumer threads; buffered chunks + cursors persist."""
+        tbl = self.table
+        tbl.shutdown()            # unblocks producers stuck in push
+        with tbl.cond:
+            self._shutdown = True
+            tbl.cond.notify_all()
+        for t in list(self.threads.values()):
+            t.join(timeout=5.0)
+        tbl.detach()
+
+    # -- activation (first chunk) -------------------------------------------
+    def activate(self, c: int) -> None:
+        c = int(c)
+        with self.table.cond:
+            if self._shutdown or c in self.threads:
+                return
+            t = threading.Thread(target=self._consume, args=(c,),
+                                 name=f"stream-consume-{c}", daemon=True)
+            self.threads[c] = t
+        t.start()
+
+    def app_ref(self, c: int) -> _StreamAppRef:
+        ref = self.table.app_refs.get(c)
+        if ref is None:
+            ctx = self.ctx
+            outs = [_DataRef(self.s, int(j)) for j in
+                    ctx.out_cols[ctx.out_indptr[c]:ctx.out_indptr[c + 1]]]
+            ref = _StreamAppRef(self.s, c, outs)
+            self.table.app_refs[c] = ref
+        return ref
+
+    # -- the consumer thread ------------------------------------------------
+    def _consume(self, c: int) -> None:
+        tbl = self.table
+        s = self.s
+        pgt = self.ctx.pgt
+        name = pgt.app_of(c)
+        func = _APP_REGISTRY.get(name) if name else None
+        ref = self.app_ref(c)
+        hk = self.hooks
+        on_chunk = hk.on_stream_chunk if hk is not None else None
+        while True:
+            with tbl.cond:
+                if self._shutdown:
+                    return
+                if s.drop_state[c] != ST_INIT:
+                    return        # gate-failed or cancelled externally
+                item = tbl.pop_ready_locked(c)
+                if item is None:
+                    if c in self.resolved:
+                        break     # drained + resolved -> finalize
+                    tbl.cond.wait(0.05)
+                    continue
+            k, seq, value = item
+            t0 = time.monotonic()
+            self.first_t0.setdefault(c, t0)
+            if c not in self.errored:
+                try:
+                    if func is not None:
+                        func(value, ref)
+                    if on_chunk is not None:
+                        on_chunk(s, pgt.uid_of(int(tbl.src[k])),
+                                 pgt.uid_of(c), seq)
+                except StreamAbort:
+                    return        # downstream push aborted: resumable
+                except Exception:  # noqa: BLE001 - consumer becomes ERROR
+                    # keep draining (discarding) so producers unblock
+                    self.errored[c] = traceback.format_exc(limit=8)
+            t1 = time.monotonic()
+            self.chunks_processed += 1
+            if self.m_chunks is not None:
+                self.m_chunks.inc()
+            tl = self.ctx.tl
+            if tl is not None:
+                tl.stamp_chunk(c, seq, t0, t1)
+        self._finalize(c)
+
+    def _finalize(self, c: int) -> None:
+        s = self.s
+        ctx = self.ctx
+        t0 = self.first_t0.get(c, time.monotonic())
+        tb = self.errored.get(c)
+        if tb is not None:
+            s.drop_state[c] = ST_ERROR
+            s.record_error(c, tb)
+        else:
+            try:
+                func, refs, outs, _ = ctx.app_call(c)
+                fin = getattr(func, "finish", None) \
+                    if func is not None else None
+                if fin is not None:
+                    fin(refs, outs, self.app_ref(c))
+                s.drop_state[c] = ST_COMPLETED
+            except Exception:  # noqa: BLE001 - finaliser failure -> ERROR
+                s.drop_state[c] = ST_ERROR
+                s.record_error(c, traceback.format_exc(limit=8))
+        if ctx.tl is not None:
+            ctx.tl.stamp(c, t0, time.monotonic(), ctx.wave)
+        ev = self.done.get(c)
+        if ev is not None:
+            ev.set()
+
+    # -- scheduler side -----------------------------------------------------
+    def finalize_wave(self, ids: np.ndarray) -> None:
+        """Resolve frontier-ready streaming consumers and wait for each
+        to finalize (drain + ``finish``).  Raises ``_WaveTimeout`` past
+        the run deadline — consumed state persists on the table."""
+        wait_for = []
+        spawn = []
+        with self.table.cond:
+            for c in ids.tolist():
+                c = int(c)
+                ev = self.done.get(c)
+                if ev is None:
+                    ev = self.done[c] = threading.Event()
+                self.resolved.add(c)
+                if c not in self.threads:
+                    # producers are terminal: chunk counts are final
+                    if any(self.table.rcur[k] < self.table.wcur[k]
+                           for k in self.table.edges_of_dst.get(c, ())):
+                        spawn.append(c)
+                    else:
+                        wait_for.append((c, ev, True))   # finalize inline
+                        continue
+                wait_for.append((c, ev, False))
+            self.table.cond.notify_all()
+        for c in spawn:
+            self.activate(c)
+        for c, ev, inline in wait_for:
+            if inline:
+                self._finalize(c)
+                continue
+            while not ev.wait(0.1):
+                if time.monotonic() > self.ctx.deadline:
+                    raise _WaveTimeout
+
+    def cancel(self, ids: np.ndarray) -> None:
+        """Wake threads of consumers the threshold gate just ERRORed;
+        they observe the terminal state and exit without finalizing."""
+        with self.table.cond:
+            for c in ids.tolist():
+                self.resolved.add(int(c))
+            self.table.cond.notify_all()
 
 
 # ---------------------------------------------------------------------------
@@ -456,13 +785,20 @@ class _Dispatch:
 def execute_frontier(session: CompiledSession,
                      timeout: float = 60.0,
                      hooks: Optional[ExecHooks] = None,
-                     executors: Optional[Dict[str, Any]] = None) -> bool:
+                     executors: Optional[Dict[str, Any]] = None,
+                     stream: Union[StreamConfig, bool, None] = None) -> bool:
     """Run a deployed :class:`CompiledSession` to completion, wave-by-wave.
 
     ``executors`` (node name -> thread pool, e.g.
     ``MasterDropManager.node_executors()``) lets registry-app waves that
     span several nodes overlap; without it Python apps run sequentially
     in the calling thread.  Vectorised fast paths are unaffected.
+
+    ``stream`` controls the chunk-granular streaming lane: ``None``
+    (default) auto-enables it when the graph has active streaming edges,
+    a :class:`StreamConfig` enables it with explicit knobs, ``False``
+    degrades streaming edges to batch dependencies — emitting the
+    ``exec.streaming_edges_degraded`` counter and a one-time warning.
 
     Resume-aware: ``pending_inputs`` and the errored-predecessor counters
     are derived from the *current* state array, so a session restored from
@@ -485,8 +821,31 @@ def execute_frontier(session: CompiledSession,
         return True
     state = session.drop_state
     kind = pgt.kind_arr
+
+    # streaming lane setup — must precede _Dispatch so stream-producing
+    # apps are routed off the vectorised fast paths.  Pure-batch graphs
+    # take the `not has_streaming_edges()` exit and allocate nothing.
+    stream_cfg: Optional[StreamConfig] = None
+    if isinstance(stream, StreamConfig):
+        stream_cfg = stream
+        stream = stream.enabled
+    enabled = stream is None or bool(stream)
+    tbl: Optional[StreamTable] = None
+    if pgt.has_streaming_edges():
+        if enabled:
+            tbl = session.enable_streaming(stream_cfg)
+        else:
+            from .streaming import active_stream_edges
+            n_active = session.stream.n_edges if session.stream is not None \
+                else int(active_stream_edges(pgt).size)
+            if n_active:
+                _warn_degraded(n_active)
+                if session.metrics is not None:
+                    session.metrics.counter(
+                        "exec.streaming_edges_degraded").inc(n_active)
+
     in_deg = pgt.in_degrees()
-    ctx = _Dispatch(session, hooks, executors)
+    ctx = _Dispatch(session, hooks, executors, stream_table=tbl)
     out_indptr, out_cols = ctx.out_indptr, ctx.out_cols
 
     # readiness counters, derived from current state (fresh start or resume)
@@ -509,6 +868,11 @@ def execute_frontier(session: CompiledSession,
     deadline = time.monotonic() + timeout
     ctx.deadline = deadline   # enforced mid-wave too (wide Python waves)
 
+    lane: Optional[_StreamLane] = None
+    if tbl is not None and tbl.n_edges:
+        lane = _StreamLane(ctx, tbl)
+        bp_start = tbl.backpressure_waits
+
     # telemetry: wave/frontier metrics at wave granularity, per-drop
     # stamps in the dispatch fast paths.  Resumed sessions keep wave
     # numbers monotone by continuing past the highest stamped index.
@@ -521,73 +885,106 @@ def execute_frontier(session: CompiledSession,
         ctx.m_batches = reg.counter("exec.dispatch_batches")
     wave_no = tl.max_wave + 1 if tl is not None else 0
 
-    while frontier.size:
-        if time.monotonic() > deadline:
-            return False
-        if hooks is not None and hooks.on_wave is not None:
-            # state is consistent here (all drops terminal or INIT); any
-            # exception raised by the hook leaves the session resumable
-            hooks.on_wave(session, n - remaining, n)
-        ctx.wave = wave_no
+    if lane is not None:
         if reg is not None:
-            m_waves.inc()
-            m_front.observe(float(frontier.size))
-        wave_t0 = time.monotonic() if tl is not None else 0.0
+            lane.m_chunks = reg.counter("exec.stream_chunks")
+        lane.attach()
 
-        # 1. complete all ready data drops of the wave (vectorised)
-        data_ids = frontier[kind[frontier] == KIND_DATA]
-        if data_ids.size:
-            bad = err_preds[data_ids] > 0
-            state[data_ids[~bad]] = ST_COMPLETED
-            errs = data_ids[bad]
-            if errs.size:
-                state[errs] = ST_ERROR
-                for i in errs.tolist():
-                    session.record_error(i, "producer errored")
-            if tl is not None:
-                tl.stamp_batch(data_ids, wave_t0, time.monotonic(),
-                               wave_no)
-
-        # 2. fire all runnable apps (threshold gate, then per-node batches)
-        app_ids = frontier[kind[frontier] != KIND_DATA]
-        if app_ids.size:
-            n_in = in_deg[app_ids]
-            nerr = err_preds[app_ids]
-            frac_err = nerr / np.maximum(n_in, 1)
-            fail = frac_err > ctx.thr[app_ids]
-            failed = app_ids[fail]
-            if failed.size:
-                state[failed] = ST_ERROR
-                for i, ne, ni in zip(failed.tolist(), nerr[fail].tolist(),
-                                     n_in[fail].tolist()):
-                    session.record_error(i, (
-                        f"{ne}/{ni} inputs errored > "
-                        f"t={float(ctx.thr[i])}"))
-                if tl is not None:
-                    tl.stamp_batch(failed, wave_t0, time.monotonic(),
-                                   wave_no)
-            try:
-                ctx.dispatch(app_ids[~fail])
-            except _WaveTimeout:
-                # mid-wave abort: skip the in-degree advance; counters
-                # are re-derived from the state array on resume
+    try:
+        while frontier.size:
+            if time.monotonic() > deadline:
                 return False
+            if hooks is not None and hooks.on_wave is not None:
+                # state is consistent here (all drops terminal or INIT);
+                # any exception raised by the hook leaves the session
+                # resumable (the finally below parks the stream lane too)
+                hooks.on_wave(session, n - remaining, n)
+            ctx.wave = wave_no
+            if reg is not None:
+                m_waves.inc()
+                m_front.observe(float(frontier.size))
+            wave_t0 = time.monotonic() if tl is not None else 0.0
 
-        remaining -= int(frontier.size)
-        wave_no += 1
+            # 1. complete all ready data drops of the wave (vectorised)
+            data_ids = frontier[kind[frontier] == KIND_DATA]
+            if data_ids.size:
+                bad = err_preds[data_ids] > 0
+                state[data_ids[~bad]] = ST_COMPLETED
+                errs = data_ids[bad]
+                if errs.size:
+                    state[errs] = ST_ERROR
+                    for i in errs.tolist():
+                        session.record_error(i, "producer errored")
+                if tl is not None:
+                    tl.stamp_batch(data_ids, wave_t0, time.monotonic(),
+                                   wave_no)
 
-        # 3. advance in-degrees: one np.add.at per wave
-        succ = _gather(out_indptr, out_cols, frontier)
-        if succ.size:
-            np.add.at(pending, succ, -1)
-            errored = frontier[state[frontier] == ST_ERROR]
-            if errored.size:
-                np.add.at(err_preds,
-                          _gather(out_indptr, out_cols, errored), 1)
-            cand = np.unique(succ)
-            frontier = cand[(pending[cand] == 0) & (state[cand] == ST_INIT)]
-        else:
-            frontier = np.empty(0, dtype=np.int64)
+            # 2. fire all runnable apps (threshold gate, then per-node
+            # batches; frontier-ready streaming consumers go to the lane)
+            app_ids = frontier[kind[frontier] != KIND_DATA]
+            if app_ids.size:
+                n_in = in_deg[app_ids]
+                nerr = err_preds[app_ids]
+                frac_err = nerr / np.maximum(n_in, 1)
+                fail = frac_err > ctx.thr[app_ids]
+                failed = app_ids[fail]
+                if failed.size:
+                    state[failed] = ST_ERROR
+                    for i, ne, ni in zip(failed.tolist(),
+                                         nerr[fail].tolist(),
+                                         n_in[fail].tolist()):
+                        session.record_error(i, (
+                            f"{ne}/{ni} inputs errored > "
+                            f"t={float(ctx.thr[i])}"))
+                    if tl is not None:
+                        tl.stamp_batch(failed, wave_t0, time.monotonic(),
+                                       wave_no)
+                run_ids = app_ids[~fail]
+                stream_ready = None
+                if lane is not None:
+                    is_sc = tbl.is_consumer[run_ids]
+                    if is_sc.any():
+                        stream_ready = run_ids[is_sc]
+                        run_ids = run_ids[~is_sc]
+                    if failed.size:
+                        fsc = tbl.is_consumer[failed]
+                        if fsc.any():
+                            lane.cancel(failed[fsc])
+                try:
+                    ctx.dispatch(run_ids)
+                    if stream_ready is not None:
+                        # batch apps of the wave have fired; now wait for
+                        # the wave's streaming consumers to drain+finish
+                        lane.finalize_wave(stream_ready)
+                except _WaveTimeout:
+                    # mid-wave abort: skip the in-degree advance;
+                    # counters are re-derived from the state on resume
+                    return False
+
+            remaining -= int(frontier.size)
+            wave_no += 1
+
+            # 3. advance in-degrees: one np.add.at per wave
+            succ = _gather(out_indptr, out_cols, frontier)
+            if succ.size:
+                np.add.at(pending, succ, -1)
+                errored = frontier[state[frontier] == ST_ERROR]
+                if errored.size:
+                    np.add.at(err_preds,
+                              _gather(out_indptr, out_cols, errored), 1)
+                cand = np.unique(succ)
+                frontier = cand[(pending[cand] == 0)
+                                & (state[cand] == ST_INIT)]
+            else:
+                frontier = np.empty(0, dtype=np.int64)
+    finally:
+        if lane is not None:
+            lane.shutdown()
+            if reg is not None:
+                delta = tbl.backpressure_waits - bp_start
+                if delta:
+                    reg.counter(
+                        "exec.stream_backpressure_waits").inc(delta)
 
     if remaining == 0:
         if hooks is not None and hooks.on_wave is not None:

@@ -41,8 +41,23 @@ AppFunc = Callable[[List[DataDrop], List[DataDrop], AppDrop], Any]
 _APP_REGISTRY: Dict[str, AppFunc] = {}
 
 
-def register_app(name: str) -> Callable[[AppFunc], AppFunc]:
+def register_app(name: str, *, streaming: bool = False,
+                 finish: Optional[AppFunc] = None
+                 ) -> Callable[[AppFunc], AppFunc]:
+    """Register a pipeline component (paper §3.1).
+
+    ``streaming=True`` marks the function as a *chunk handler*: it is
+    called as ``fn(value, app)`` once per chunk arriving on a streaming
+    input (§4/Fig. 10), accumulating across chunks in ``app.scratch``.
+    The optional ``finish(ok_inputs, outputs, app)`` runs at batch
+    resolution (all inputs terminal) to emit final outputs; without it
+    the drop completes without writing.  Both engines honour the marks —
+    see ``docs/streaming.md``."""
     def deco(fn: AppFunc) -> AppFunc:
+        if streaming:
+            fn.streaming = True            # type: ignore[attr-defined]
+        if finish is not None:
+            fn.finish = finish             # type: ignore[attr-defined]
         _APP_REGISTRY[name] = fn
         return fn
     return deco

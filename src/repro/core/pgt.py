@@ -402,6 +402,7 @@ class CompiledPGT:
         self._oids = oids
         self._uid_map: Optional[Dict[str, int]] = None
         self._params_override: Dict[int, Dict[str, Any]] = {}
+        self._has_streaming: Optional[bool] = None   # lazy edge scan
         # lazy CSR caches
         self._out: Optional[
             Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
@@ -625,6 +626,14 @@ class CompiledPGT:
             self._in_eid = coo_to_csr(self.num_drops, self.edge_dst,
                                       self.edge_src)
         return self._in_eid
+
+    def has_streaming_edges(self) -> bool:
+        """Whether any edge carries the streaming flag (cached — the
+        frontier scheduler checks this per run, and templates share one
+        pgt across many sessions)."""
+        if self._has_streaming is None:
+            self._has_streaming = bool(self.edge_streaming.any())
+        return self._has_streaming
 
     def in_degrees(self) -> np.ndarray:
         """Per-drop incoming edge count (the frontier scheduler's

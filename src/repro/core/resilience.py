@@ -266,6 +266,11 @@ class CompiledFaultManager:
             raise RuntimeError("no live nodes left to migrate onto")
         s, pgt = self.session, self.session.pgt
         lost = self.lost_set()
+        if s.stream is not None and lost.size:
+            # a lost streaming consumer has irrecoverably consumed part
+            # of its ring — pull its source data (and their producers)
+            # into the lost set so the stream replays from chunk 0
+            lost = s.stream.expand_lost(lost)
         if lost.size:
             # migrate only the lost drops placed on dead nodes; lost
             # lineage already on live nodes (producers pulled in by the
@@ -283,6 +288,10 @@ class CompiledFaultManager:
             moved_by_node = {live[t]: moved[t::live_ids.size]
                              for t in range(live_ids.size)}
             self.master.refresh_compiled_slices(s, pgt, moved_by_node)
+            if s.stream is not None:
+                mask = np.zeros(len(pgt), dtype=bool)
+                mask[lost] = True
+                s.stream.invalidate(mask)
             self.recovered.append(lost)
         s.reopen()
         s.recoveries += 1
@@ -502,7 +511,14 @@ class ResilientRunner:
                 func, ins, outs, app = ctx.app_call(
                     i, out_ref=lambda s, j: _StagedRef(s, j, buf))
                 if func is not None:
-                    func(ins, outs, app)
+                    if getattr(func, "streaming", False):
+                        # degraded/batch resolution of a streaming app:
+                        # run its finish stage if present, skip otherwise
+                        fin = getattr(func, "finish", None)
+                        if fin is not None:
+                            fin(ins, outs, app)
+                    else:
+                        func(ins, outs, app)
                 return buf, None
             except Exception:  # noqa: BLE001 - becomes a drop ERROR
                 err = traceback.format_exc(limit=8)
@@ -585,13 +601,19 @@ class NodeFailureInterrupt(Exception):
 def execute_resilient(session: CompiledSession, master: MasterDropManager,
                       config: ResilienceConfig, timeout: float = 60.0,
                       fault_manager: Optional[CompiledFaultManager] = None,
-                      ) -> Tuple[bool, ResilienceStats]:
+                      hooks: Optional[ExecHooks] = None,
+                      stream=None) -> Tuple[bool, ResilienceStats]:
     """Run a deployed compiled session under a resilience policy.
 
     Drives ``execute_frontier`` with hooks: scripted node failures fire at
     wave boundaries (where every drop is terminal or INIT — no in-flight
     state), recovery resets/remaps the lost lineage, and the loop resumes
     the scheduler until the graph finishes or the deadline expires.
+
+    ``hooks`` merges user observability into the internal failure-script
+    hooks: a user ``on_wave`` runs before the failure check, and
+    ``on_stream_chunk``/``on_backpressure`` pass straight through.
+    ``stream`` forwards to :func:`execute_frontier` unchanged.
     """
     fm = fault_manager or CompiledFaultManager(session, master)
     stats = fm.stats
@@ -599,8 +621,11 @@ def execute_resilient(session: CompiledSession, master: MasterDropManager,
         if config.needs_runner else None
     pending = sorted(config.failures, key=lambda f: f.at_fraction)
     fired: Set[int] = set()
+    user_wave = hooks.on_wave if hooks is not None else None
 
     def on_wave(sess: CompiledSession, completed: int, total: int) -> None:
+        if user_wave is not None:
+            user_wave(sess, completed, total)
         frac = completed / max(total, 1)
         trig = [f for f in pending
                 if id(f) not in fired and frac >= f.at_fraction]
@@ -608,8 +633,11 @@ def execute_resilient(session: CompiledSession, master: MasterDropManager,
             fired.update(id(f) for f in trig)
             raise NodeFailureInterrupt([f.node for f in trig])
 
-    hooks = ExecHooks(on_wave=on_wave if pending else None,
-                      python_runner=runner)
+    hooks = ExecHooks(
+        on_wave=on_wave if (pending or user_wave is not None) else None,
+        python_runner=runner,
+        on_stream_chunk=hooks.on_stream_chunk if hooks is not None else None,
+        on_backpressure=hooks.on_backpressure if hooks is not None else None)
     deadline = time.monotonic() + timeout
     while True:
         budget = deadline - time.monotonic()
@@ -622,7 +650,7 @@ def execute_resilient(session: CompiledSession, master: MasterDropManager,
             finished = execute_frontier(
                 session, timeout=budget, hooks=hooks,
                 executors=None if runner is not None
-                else master.node_executors())
+                else master.node_executors(), stream=stream)
             return finished, stats
         except NodeFailureInterrupt as nf:
             for node in nf.nodes:

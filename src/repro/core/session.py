@@ -318,6 +318,10 @@ class CompiledSession:
         # MetricsRegistry the scheduler/resilience layers update
         self.timeline = None               # .telemetry.Timeline | None
         self.metrics = None                # .telemetry.MetricsRegistry | None
+        # streaming chunk rings (None unless the graph has active
+        # streaming edges AND enable_streaming ran — batch graphs pay
+        # nothing; see .streaming.StreamTable)
+        self.stream = None                 # .streaming.StreamTable | None
         # resilience counters (maintained by core.resilience; always
         # present so monitoring code can read them unconditionally)
         self.recoveries = 0                # node-failure recovery passes
@@ -342,6 +346,20 @@ class CompiledSession:
         if self.timeline is None:
             from .telemetry import Timeline
             self.timeline = Timeline(self)
+
+    # -- streaming ---------------------------------------------------------
+    def enable_streaming(self, config=None):
+        """Build the per-streaming-edge chunk-ring table (idempotent).
+
+        Returns the :class:`repro.core.streaming.StreamTable`, or None
+        when the graph has no *active* streaming edges (streaming flag +
+        data→app + streaming-marked consumer func) — pure-batch sessions
+        allocate nothing.  Seeds written before this call are pushed as
+        first chunks (see ``StreamTable.build``)."""
+        if self.stream is None and not self.closed:
+            from .streaming import StreamTable
+            self.stream = StreamTable.build(self, config)
+        return self.stream
 
     def record_error(self, idx: int, msg: str) -> None:
         """Record a drop failure: error_info + a ``dropFailed`` event on
@@ -405,6 +423,7 @@ class CompiledSession:
         self.payload_present = np.empty(0, dtype=bool)
         self.error_info = {}
         self.node_slices = {}
+        self.stream = None
         self._finished.set()
 
     # -- data access (input seeding / result readout) ----------------------
@@ -427,6 +446,8 @@ class CompiledSession:
                                f"{_ST_NAMES[self.drop_state[idx]]}")
         self.payloads[idx] = value
         self.payload_present[idx] = True
+        if self.stream is not None and self.stream.is_src[idx]:
+            self.stream.push(idx, value)
 
     def read(self, uid: str) -> Any:
         return self._read_idx(self.index_of(uid))
@@ -450,6 +471,8 @@ class CompiledSession:
         """Payload write from a producing app (registry shim path)."""
         self.payloads[idx] = value
         self.payload_present[idx] = True
+        if self.stream is not None and self.stream.is_src[idx]:
+            self.stream.push(idx, value)
         if self.payload_kind[idx] == PK_FILE:
             path = Path(self._file_path(idx))
             path.parent.mkdir(parents=True, exist_ok=True)
@@ -522,5 +545,9 @@ class CompiledSession:
                 self.payloads[i] = v
                 self.payload_present[i] = True
         self._finished.clear()
+        # in-flight stream chunks are not checkpointed (checkpoint at
+        # stream boundaries); drop the table so the next execute rebuilds
+        # it and re-seeds rings from restored payloads
+        self.stream = None
         if bool((self.drop_state != ST_INIT).all()):
             self.finish()

@@ -140,7 +140,7 @@ class Timeline:
     """
 
     __slots__ = ("pgt", "_t_start", "_t_end", "_wave", "_node", "epoch",
-                 "max_wave", "_pending", "_alloc_lock")
+                 "max_wave", "_pending", "_alloc_lock", "chunks")
 
     def __init__(self, session: Any) -> None:
         self.pgt = session.pgt
@@ -152,6 +152,11 @@ class Timeline:
         self.max_wave = -1                # resume continues from here
         self._pending: List[tuple] = []   # deferred batch stamps
         self._alloc_lock = threading.Lock()
+        # streaming chunk spans: (consumer idx, seq, t0, t1) per chunk
+        # processed by the compiled lane.  A plain list — chunks are
+        # application-granular, and appends under the GIL are atomic
+        # enough for the multi-threaded consumer lanes.
+        self.chunks: List[tuple] = []
 
     def _ensure(self) -> None:
         """Allocate the stamp arrays on first use.  Double-checked on
@@ -220,6 +225,18 @@ class Timeline:
             self._node[i] = node
         if wave > self.max_wave:
             self.max_wave = wave
+
+    def stamp_chunk(self, i: int, seq: int, t0: float, t1: float) -> None:
+        """Record one processed stream chunk (consumer ``i``, chunk
+        ``seq``).  Called from lane consumer threads."""
+        self.chunks.append((int(i), int(seq), t0, t1))
+
+    def chunk_spans(self) -> np.ndarray:
+        """Chunk spans as a float64 array of rows (idx, seq, t0, t1) —
+        what the streaming bench computes overlap fractions from."""
+        if not self.chunks:
+            return np.empty((0, 4), dtype=np.float64)
+        return np.asarray(self.chunks, dtype=np.float64)
 
     def stamped(self) -> np.ndarray:
         """Ids of drops that have been stamped (wave >= 0)."""
@@ -434,10 +451,13 @@ def export_chrome_trace(session: Any, path: Union[str, Path], *,
         tracks += 1
     unplaced_tid = _TID_NODE0 + len(pgt.node_names)
 
-    # common timebase: earliest stamp across drops and spans
+    # common timebase: earliest stamp across drops, chunks and spans
+    chunk_rows = tl.chunk_spans()
     bases = []
     if ids.size:
         bases.append(float(np.nanmin(tl.t_start[ids])))
+    if chunk_rows.shape[0]:
+        bases.append(float(chunk_rows[:, 2].min()))
     for sp in spans or ():
         bases.append(sp.t_start)
     t_base = min(bases) if bases else tl.epoch
@@ -498,6 +518,21 @@ def export_chrome_trace(session: Any, path: Union[str, Path], *,
                            "name": "thread_name",
                            "args": {"name": "unplaced"}})
             tracks += 1
+
+    # streaming chunk spans: one slice per processed chunk on the
+    # consumer's node track — this is where producer/consumer overlap
+    # becomes visible (chunk slices sitting under a producer's slice)
+    node_ids = pgt.node_ids
+    for idx, seq, t0, t1 in tl.chunks:
+        nid = int(node_ids[idx])
+        tid = _TID_NODE0 + nid if nid >= 0 else unplaced_tid
+        events.append({
+            "ph": "X", "pid": pid, "tid": tid,
+            "name": f"{pgt.uid_of(int(idx))} · chunk {int(seq)}",
+            "ts": us(float(t0)),
+            "dur": max(round((float(t1) - float(t0)) * 1e6, 3), 0.01),
+            "args": {"chunk": int(seq)}})
+        slices += 1
 
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)

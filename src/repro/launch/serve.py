@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import (EngineManager, Pipeline, TelemetryConfig,
+from ..core import (EngineConfig, EngineManager, Pipeline, TelemetryConfig,
                     register_app)
 from ..dsl import GraphBuilder
 from ..models import model as M
@@ -55,8 +55,18 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
                 microbatch: int = 4, prompt_len: int = 32,
                 decode_steps: int = 16, num_nodes: int = 2,
                 sessions: int = 1, max_concurrent: int = 4,
-                stats_json: Optional[str] = None
-                ) -> Dict[str, Any]:
+                stats_json: Optional[str] = None,
+                streaming: bool = False, execution: str = "objects",
+                hooks: Any = None) -> Dict[str, Any]:
+    """Serve ``num_requests`` prompts through the graph engine.
+
+    ``streaming=True`` switches token delivery to the chunk lane: each
+    decode step writes one ``(microbatch, step, tokens)`` chunk onto the
+    ``gen`` drop, whose edge into the assembler is streaming — the
+    assembler accumulates chunks as they arrive (on either engine) and
+    concatenates at batch resolution.  ``hooks`` (ExecHooks) forwards to
+    :meth:`Pipeline.execute` for chunk/wave observability.
+    """
     assert num_requests % microbatch == 0
     n_micro = num_requests // microbatch
     max_seq = prompt_len + decode_steps
@@ -101,24 +111,58 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
         for o in outputs:
             o.write(np.asarray(jnp.concatenate(toks, axis=1)))
 
+    @register_app("serve/decode-stream")
+    def decode_stream_app(inputs, outputs, app):
+        # streaming variant: one chunk per generated token position so
+        # the assembler overlaps with generation; chunks are tagged with
+        # (microbatch id, step) — assembly order is interleave-proof
+        (mb,) = app.meta["oid"]
+        st = inputs[0].read()
+        tok, cache = st["next"], st["cache"]
+        for o in outputs:
+            o.write((mb, 0, np.asarray(tok)))
+        for i in range(decode_steps - 1):
+            tok, cache = decode_one(params, cache, tok,
+                                    jnp.int32(prompt_len + i))
+            for o in outputs:
+                o.write((mb, i + 1, np.asarray(tok)))
+
     @register_app("serve/assemble")
     def assemble(inputs, outputs, app):
         chunks = [i.read() for i in inputs]
         for o in outputs:
             o.write(np.concatenate(chunks, axis=0))
 
+    def _assemble_finish(inputs, outputs, app):
+        per_mb = app.scratch
+        mbs = sorted(per_mb)
+        rows = [np.concatenate([per_mb[m][s] for s in sorted(per_mb[m])],
+                               axis=1) for m in mbs]
+        for o in outputs:
+            o.write(np.concatenate(rows, axis=0))
+
+    @register_app("serve/assemble-stream", streaming=True,
+                  finish=_assemble_finish)
+    def assemble_stream(value, app):
+        mb, step, tok = value
+        app.scratch.setdefault(mb, {})[step] = tok
+
     g = GraphBuilder("serve")
     g.data("reqs")
+    decode_kind = "serve/decode-stream" if streaming else "serve/decode"
+    asm_kind = "serve/assemble-stream" if streaming else "serve/assemble"
     with g.scatter("mb", n_micro):
         g.component("prefill", app="serve/prefill", time=0.5)
         g.data("kv", volume=1e6)
-        g.component("decode", app="serve/decode", time=1.0)
+        g.component("decode", app=decode_kind, time=1.0)
         g.data("gen")
     with g.gather("all", n_micro):
-        g.component("assemble", app="serve/assemble", time=0.01)
+        g.component("assemble", app=asm_kind, time=0.01)
     g.data("responses")
-    g.chain("reqs", "prefill", "kv", "decode", "gen", "assemble",
-            "responses")
+    g.chain("reqs", "prefill", "kv", "decode", "gen")
+    # token delivery: streaming mode rides the chunk lane gen -> assemble
+    g.connect("gen", "assemble", streaming=streaming)
+    g.chain("assemble", "responses")
 
     if sessions > 1:
         return _run_sessions(g.graph(), sessions=sessions,
@@ -129,15 +173,18 @@ def run_serving(cfg: ArchConfig, *, num_requests: int = 8,
                              stats_json=stats_json)
 
     telemetry = TelemetryConfig(metrics=True) if stats_json else None
-    with Pipeline(num_nodes=num_nodes, workers_per_node=2,
-                  telemetry=telemetry) as p:
+    engine_cfg = EngineConfig(num_nodes=num_nodes, workers_per_node=2,
+                              execution=execution, telemetry=telemetry)
+    with Pipeline(engine_cfg) as p:
         p.translate(g.graph())
         p.deploy()
         t0 = time.monotonic()
-        rep = p.execute(inputs={"reqs": num_requests}, timeout=3600)
+        rep = p.execute(inputs={"reqs": num_requests}, timeout=3600,
+                        hooks=hooks)
         wall = time.monotonic() - t0
         assert rep.ok, rep.errors[:3]
-        out = p.session.drops["responses"].read()
+        out = (p.session.read("responses") if execution == "compiled"
+               else p.session.drops["responses"].read())
         if stats_json:
             _dump_stats(stats_json, {
                 "metrics": p.metrics.snapshot() if p.metrics else {},
@@ -220,13 +267,21 @@ def main() -> None:
     ap.add_argument("--stats-json", type=str, default=None,
                     help="enable the metrics registry and dump its "
                          "snapshot (plus serving stats) to this path")
+    ap.add_argument("--streaming", action="store_true",
+                    help="stream decode tokens chunk-by-chunk into the "
+                         "assembler (docs/streaming.md)")
+    ap.add_argument("--execution", choices=("objects", "compiled"),
+                    default="objects",
+                    help="execution substrate for the single-session "
+                         "path (--sessions 1)")
     args = ap.parse_args()
     cfg = get_smoke_config("codeqwen15_7b")
     run_serving(cfg, num_requests=args.requests,
                 microbatch=args.microbatch, prompt_len=args.prompt,
                 decode_steps=args.decode, sessions=args.sessions,
                 max_concurrent=args.concurrent,
-                stats_json=args.stats_json)
+                stats_json=args.stats_json, streaming=args.streaming,
+                execution=args.execution)
 
 
 if __name__ == "__main__":

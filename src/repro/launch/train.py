@@ -31,7 +31,7 @@ import numpy as np
 
 from ..checkpointing import CheckpointManager
 from ..configs import get_smoke_config
-from ..core import Pipeline, register_app
+from ..core import EngineConfig, Pipeline, register_app
 from ..data import synthetic_batch
 from ..dsl import GraphBuilder
 from ..models.common import ArchConfig
@@ -166,7 +166,8 @@ def run_training(cfg: ArchConfig, *, steps: int = 40, shards: int = 2,
             o.write(v)
 
     lg = build_training_graph(steps, shards, ckpt_every if mgr else 0)
-    with Pipeline(num_nodes=num_nodes, workers_per_node=2, dop=4) as p:
+    with Pipeline(EngineConfig(num_nodes=num_nodes, workers_per_node=2,
+                               dop=4)) as p:
         pgt = p.translate(lg)
         p.deploy()
         t0 = time.monotonic()

@@ -344,3 +344,76 @@ def test_repo_baseline_matches_repo_results():
                         ceil_current=cb.collect_ceilings(root / "results"),
                         ceil_baseline=baseline.get("ceilings", {}))
     assert report["failures"] == [], report["failures"]
+
+
+# ---------------------------------------------------------------------------
+# streaming overlap floor (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def _write_streaming_results(directory: Path, overlap) -> None:
+    directory.mkdir(parents=True, exist_ok=True)
+    with open(directory / "bench_execute.json", "w") as fh:
+        json.dump({"benchmark": "bench_execute", "rows": [
+            {"tier": 10000, "mode": "compiled", "drops": 10003,
+             "drops_per_s": 500000.0},
+            {"tier": 1000, "mode": "streaming", "drops": 1003,
+             "streams": 250, "chunks_total": 2000,
+             "overlap_fraction": overlap, "execute_s": 1.5},
+        ]}, fh)
+
+
+def test_streaming_metric_extraction(tmp_path, capsys):
+    _write_streaming_results(tmp_path / "results", 0.85)
+    cur = cb.streaming_metrics(tmp_path / "results" / "bench_execute.json")
+    assert cur == {"execute:streaming:1000:overlap_fraction": 0.85}
+    # the overlap fraction is a floor, never a ceiling
+    assert cb.collect_ceilings(tmp_path / "results") == {}
+    # and collect_current carries it alongside the throughput floors
+    assert cb.collect_current(tmp_path / "results")[
+        "execute:streaming:1000:overlap_fraction"] == 0.85
+    # malformed overlap warns and skips, never crashes the gate
+    _write_streaming_results(tmp_path / "results", "not-a-number")
+    assert cb.streaming_metrics(
+        tmp_path / "results" / "bench_execute.json") == {}
+    assert "skipping malformed row" in capsys.readouterr().err
+
+
+def test_streaming_overlap_above_floor_passes(tmp_path):
+    # measured 0.5 against the committed 0.45 floor: effective bound
+    # 0.45 * 0.7 = 0.315, the ISSUE 9 >= 0.3 overlap bar
+    _write_streaming_results(tmp_path / "results", 0.5)
+    doc = {"metrics": {
+        "execute:streaming:1000:overlap_fraction": 0.45}}
+    json.dump(doc, open(tmp_path / "baseline.json", "w"))
+    rc, report = _run(tmp_path)
+    assert rc == 0 and report["failures"] == []
+
+
+def test_streaming_overlap_below_floor_fails(tmp_path):
+    # 0.2 overlap = effectively batch execution; must trip the gate
+    _write_streaming_results(tmp_path / "results", 0.2)
+    doc = {"metrics": {
+        "execute:streaming:1000:overlap_fraction": 0.45}}
+    json.dump(doc, open(tmp_path / "baseline.json", "w"))
+    rc, report = _run(tmp_path)
+    assert rc == 1
+    assert [f["metric"] for f in report["failures"]] == \
+        ["execute:streaming:1000:overlap_fraction"]
+    assert report["failures"][0]["kind"] == "floor"
+
+
+def test_streaming_floor_missing_row_reported_not_failed(tmp_path):
+    # a bench run that skipped the streaming tier must not fail the gate
+    _write_results(tmp_path / "results", 500000.0, 5000.0)
+    doc = {"metrics": {
+        "execute:compiled:10000:drops_per_s": 500000.0,
+        "execute:objects:10000:drops_per_s": 5000.0,
+        "translate:translate_csr_drops_per_s[w=10000;n=60001]": 90000.0,
+        "execute:streaming:1000:overlap_fraction": 0.45}}
+    json.dump(doc, open(tmp_path / "baseline.json", "w"))
+    rc, report = _run(tmp_path)
+    assert rc == 0
+    missing = [r for r in report["checked"] if r["status"] == "missing"]
+    assert [r["metric"] for r in missing] == \
+        ["execute:streaming:1000:overlap_fraction"]

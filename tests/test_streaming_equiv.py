@@ -1,0 +1,495 @@
+"""Chunk-granular streaming on the compiled engine (the PR-9 contract).
+
+The object engine delivers every ``DataDrop.write`` to streaming
+consumers synchronously (§4/Fig. 10) and is the semantic oracle; the
+compiled chunk lane (ring buffers + per-consumer drain threads in
+``exec_compiled._StreamLane``) must agree on final states and payloads
+while actually overlapping consumption with production.  Covered here:
+
+* per-edge chunk ordering and payload equivalence on both engines,
+* the overlap property itself (consumer handles chunk 0 while its
+  producer is still executing — proven with an event handshake),
+* producer backpressure on a bounded ring (and its metric),
+* recovery: ``invalidate`` resets ring cursors, ``expand_lost`` pulls
+  streaming producers back in, and a node death mid-stream replays the
+  stream with results equal to the fault-free oracle,
+* degraded mode (``stream=False``): batch fallback + counter + one-time
+  warning,
+* randomized mixed batch/streaming graphs (seeded always; driven by
+  hypothesis where installed).
+"""
+import random
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, ExecHooks, FailureScript, Pipeline,
+                        ResilienceConfig, StreamConfig, execute_frontier,
+                        register_app)
+from repro.core import exec_compiled
+from repro.core.session import ST_COMPLETED
+from repro.dsl import GraphBuilder
+
+# ---------------------------------------------------------------------------
+# apps
+# ---------------------------------------------------------------------------
+
+
+@register_app("st/emit4")
+def _emit4(inputs, outputs, app):
+    for i in range(4):
+        for o in outputs:
+            o.write(("c", i))
+
+
+def _collect_finish(inputs, outputs, app):
+    # seq-keyed accumulation: idempotent under at-least-once re-delivery
+    # (recovery replays streams from chunk 0)
+    seen = app.scratch.get("seen", {})
+    for o in outputs:
+        o.write([seen[k] for k in sorted(seen)])
+
+
+@register_app("st/collect", streaming=True, finish=_collect_finish)
+def _collect(value, app):
+    seq, v = value
+    app.scratch.setdefault("seen", {})[seq] = v
+
+
+@register_app("st/emit-seq")
+def _emit_seq(inputs, outputs, app):
+    for i in range(4):
+        for o in outputs:
+            o.write((i, i * 10))
+
+
+@register_app("st/last-double")
+def _last_double(inputs, outputs, app):
+    # batch consumer for (seq, value) chunk tuples: sees the final write
+    seq, v = inputs[0].read()
+    for o in outputs:
+        o.write((seq, v * 2))
+
+
+@register_app("st/count-ins")
+def _count_ins(inputs, outputs, app):
+    # probe: how many *batch* inputs does this app see?
+    for o in outputs:
+        o.write(("n_inputs", len(inputs)))
+
+
+# ---------------------------------------------------------------------------
+# topologies
+# ---------------------------------------------------------------------------
+
+
+def stream_chain_lg():
+    g = GraphBuilder("stream-chain")
+    g.data("src")
+    g.component("P", app="st/emit-seq")
+    g.data("d")
+    g.component("C", app="st/collect")
+    g.data("out")
+    g.chain("src", "P", "d")
+    g.connect("d", "C", streaming=True)
+    g.chain("C", "out")
+    return g.graph()
+
+
+def run_both(lg_factory, inputs=None, stream=None):
+    outs = {}
+    for mode in ("objects", "compiled"):
+        cfg = EngineConfig(execution=mode, num_nodes=2,
+                           stream=stream if mode == "compiled" else None)
+        with Pipeline(cfg) as p:
+            rep = p.run(lg_factory(), inputs=dict(inputs or {"src": 1}))
+            assert rep.ok, (mode, rep.state, rep.errors[:3])
+            if mode == "objects":
+                outs[mode] = {u: d.payload.read()
+                              for u, d in p.session.drops.items()
+                              if getattr(d, "payload", None) is not None
+                              and d.payload.exists()}
+            else:
+                s = p.session
+                outs[mode] = {u: s.read(u) for u in outs["objects"]
+                              if s.payload_present[s.pgt.index_of(u)]}
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# ordering + equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestChunkOrdering:
+    def test_chunks_arrive_in_order_both_engines(self):
+        for mode in ("objects", "compiled"):
+            seqs = []
+            hooks = ExecHooks(
+                on_stream_chunk=lambda s, src, dst, seq: seqs.append(seq))
+            with Pipeline(EngineConfig(execution=mode, num_nodes=2)) as p:
+                rep = p.run(stream_chain_lg(), inputs={"src": 1},
+                            hooks=hooks)
+                assert rep.ok, (mode, rep.errors[:3])
+            assert seqs == [0, 1, 2, 3], mode
+
+    def test_final_payloads_equivalent(self):
+        outs = run_both(stream_chain_lg)
+        assert outs["objects"]["out"] == [0, 10, 20, 30]
+        assert outs["compiled"] == outs["objects"]
+
+    def test_batch_consumer_on_streaming_edge_gets_no_batch_input(self):
+        # oracle contract (AppDrop.execute): streaming inputs live in
+        # app.streaming_inputs, never app.inputs — a non-streaming func
+        # wired on a streaming edge still fires once the producer
+        # resolves, but its batch input list is EMPTY.  Both engines
+        # must agree, chunk lane on or off.
+        def lg():
+            g = GraphBuilder("batch-on-stream")
+            g.data("src")
+            g.component("P", app="st/emit-seq")
+            g.data("d")
+            g.component("C", app="st/count-ins")
+            g.data("out")
+            g.chain("src", "P", "d")
+            g.connect("d", "C", streaming=True)
+            g.chain("C", "out")
+            return g.graph()
+        for stream in (None, StreamConfig()):
+            outs = run_both(lg, stream=stream)
+            assert outs["objects"]["out"] == ("n_inputs", 0)
+            assert outs["compiled"]["out"] == ("n_inputs", 0)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole property: consumption overlaps production
+# ---------------------------------------------------------------------------
+
+
+class TestOverlap:
+    def test_consumer_starts_before_producer_finishes(self):
+        """The producer blocks after chunk 0 until the consumer's chunk
+        handler has run — only possible if the lane processes chunks
+        while the producing wave is still in flight."""
+        got_chunk = threading.Event()
+
+        @register_app("st/handshake-prod")
+        def prod(inputs, outputs, app):
+            for o in outputs:
+                o.write((0, "first"))
+            assert got_chunk.wait(10.0), \
+                "consumer never saw chunk 0 while producer was running"
+            for o in outputs:
+                o.write((1, "second"))
+
+        def fin(inputs, outputs, app):
+            for o in outputs:
+                o.write(sorted(app.scratch["seen"]))
+
+        @register_app("st/handshake-cons", streaming=True, finish=fin)
+        def cons(value, app):
+            app.scratch.setdefault("seen", []).append(value[0])
+            got_chunk.set()
+
+        g = GraphBuilder("handshake")
+        g.data("src")
+        g.component("P", app="st/handshake-prod")
+        g.data("d")
+        g.component("C", app="st/handshake-cons")
+        g.data("out")
+        g.chain("src", "P", "d")
+        g.connect("d", "C", streaming=True)
+        g.chain("C", "out")
+
+        with Pipeline(EngineConfig(execution="compiled",
+                                   num_nodes=2)) as p:
+            rep = p.run(g.graph(), inputs={"src": 1})
+            assert rep.ok, rep.errors[:3]
+            assert p.session.read("out") == [0, 1]
+        assert got_chunk.is_set()
+
+    def test_chunk_spans_recorded_in_timeline(self):
+        from repro.core import TelemetryConfig
+        cfg = EngineConfig(
+            execution="compiled", num_nodes=2,
+            telemetry=TelemetryConfig(timeline=True, metrics=True))
+        with Pipeline(cfg) as p:
+            rep = p.run(stream_chain_lg(), inputs={"src": 1})
+            assert rep.ok
+            rows = p.session.timeline.chunk_spans()
+            assert rows.shape == (4, 4)
+            assert list(rows[:, 1]) == [0.0, 1.0, 2.0, 3.0]   # seqs
+            assert (rows[:, 3] >= rows[:, 2]).all()           # t1 >= t0
+            c = p.session.pgt.index_of("C")
+            assert (rows[:, 0] == c).all()   # spans on the consumer
+
+    def test_chunk_slices_in_perfetto_export(self, tmp_path):
+        import json
+        from repro.core import TelemetryConfig
+        cfg = EngineConfig(
+            execution="compiled", num_nodes=2,
+            telemetry=TelemetryConfig(timeline=True, metrics=True))
+        with Pipeline(cfg) as p:
+            rep = p.run(stream_chain_lg(), inputs={"src": 1})
+            assert rep.ok
+            out = tmp_path / "trace.json"
+            p.export_trace(str(out))
+        events = json.load(open(out))["traceEvents"]
+        chunk_slices = [e for e in events
+                        if e.get("ph") == "X" and "chunk" in e["name"]]
+        assert len(chunk_slices) == 4
+        assert {e["args"]["chunk"] for e in chunk_slices} == {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+
+class TestBackpressure:
+    def test_full_ring_blocks_producer_and_counts(self):
+        bp_events = []
+
+        def slow_fin(inputs, outputs, app):
+            for o in outputs:
+                o.write(app.scratch.get("n", 0))
+
+        @register_app("st/slow-cons", streaming=True, finish=slow_fin)
+        def slow_cons(value, app):
+            time.sleep(0.03)
+            app.scratch["n"] = app.scratch.get("n", 0) + 1
+
+        @register_app("st/fast-prod")
+        def fast_prod(inputs, outputs, app):
+            for i in range(8):
+                for o in outputs:
+                    o.write(i)
+
+        g = GraphBuilder("bp")
+        g.data("src")
+        g.component("P", app="st/fast-prod")
+        g.data("d")
+        g.component("C", app="st/slow-cons")
+        g.data("out")
+        g.chain("src", "P", "d")
+        g.connect("d", "C", streaming=True)
+        g.chain("C", "out")
+
+        from repro.core import TelemetryConfig
+        hooks = ExecHooks(
+            on_backpressure=lambda s, src, dst, waited:
+                bp_events.append((src, dst)))
+        cfg = EngineConfig(
+            execution="compiled", num_nodes=1,
+            stream=StreamConfig(ring_capacity=2,
+                                backpressure_poll_s=0.005),
+            telemetry=TelemetryConfig(metrics=True))
+        with Pipeline(cfg) as p:
+            rep = p.run(g.graph(), inputs={"src": 1}, hooks=hooks)
+            assert rep.ok, rep.errors[:3]
+            assert p.session.read("out") == 8    # every chunk delivered
+            tbl = p.session.stream
+            assert tbl.backpressure_waits > 0
+            snap = p.metrics.snapshot()["counters"]
+            assert snap["exec.stream_backpressure_waits"] > 0
+            assert snap["exec.stream_chunks"] == 8
+        assert bp_events and bp_events[0] == ("d", "C")
+
+
+# ---------------------------------------------------------------------------
+# recovery
+# ---------------------------------------------------------------------------
+
+
+class TestRecovery:
+    def _session(self):
+        p = Pipeline(EngineConfig(execution="compiled", num_nodes=2))
+        p.translate(stream_chain_lg())
+        p.deploy()
+        return p
+
+    def test_invalidate_resets_cursors(self):
+        with self._session() as p:
+            s = p.session
+            tbl = s.enable_streaming(StreamConfig(ring_capacity=8))
+            src = s.pgt.index_of("d")
+            s.write("src", 1)
+            for i in range(3):
+                tbl.push(src, (i, i))
+            assert tbl.wcur[0] == 3
+            # simulate partial consumption then lose the consumer
+            with tbl.cond:
+                for _ in range(2):
+                    tbl.pop_ready_locked(int(s.pgt.index_of("C")))
+            assert tbl.rcur[0] == 2
+            lost = np.zeros(len(s.pgt), dtype=bool)
+            lost[s.pgt.index_of("C")] = True
+            n_reset = tbl.invalidate(lost)
+            assert n_reset == 1
+            assert tbl.wcur[0] == 0 and tbl.rcur[0] == 0
+
+    def test_expand_lost_pulls_streaming_producer(self):
+        with self._session() as p:
+            s = p.session
+            tbl = s.enable_streaming(StreamConfig())
+            s.write("src", 1)
+            ok = execute_frontier(s, timeout=30.0)
+            assert ok
+            # consumer lost after consuming: its producer must re-run
+            lost = np.array([s.pgt.index_of("C")], dtype=np.int64)
+            grown = set(tbl.expand_lost(lost).tolist())
+            assert int(s.pgt.index_of("d")) in grown
+            assert int(s.pgt.index_of("P")) in grown
+
+    def test_node_death_mid_stream_matches_oracle(self):
+        # oracle: fault-free object run
+        with Pipeline(EngineConfig(execution="objects",
+                                   num_nodes=2)) as p:
+            rep = p.run(stream_chain_lg(), inputs={"src": 1})
+            assert rep.ok
+            oracle = p.session.drops["out"].payload.read()
+
+        with Pipeline(EngineConfig(execution="compiled",
+                                   num_nodes=2)) as p:
+            p.translate(stream_chain_lg())
+            p.deploy()
+            # kill whichever node hosts the streaming consumer, at the
+            # first wave boundary — the stream is partially consumed
+            nid = int(p.pgt.node_ids[p.pgt.index_of("C")])
+            victim = sorted(p.master.node_managers())[nid]
+            p.resilience = ResilienceConfig(
+                failures=[FailureScript(victim, at_fraction=0.1)])
+            rep = p.execute(timeout=60.0, inputs={"src": 1})
+            assert rep.ok, (rep.state, rep.errors[:3])
+            assert rep.recoveries >= 1
+            assert p.session.read("out") == oracle
+            assert p.session.drop_state[p.pgt.index_of("C")] \
+                == ST_COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# degraded mode
+# ---------------------------------------------------------------------------
+
+
+class TestDegraded:
+    def test_stream_false_degrades_with_counter_and_warning(self):
+        from repro.core import TelemetryConfig
+        exec_compiled._degrade_warned = False
+        cfg = EngineConfig(execution="compiled", num_nodes=2,
+                           stream=False,
+                           telemetry=TelemetryConfig(metrics=True))
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with Pipeline(cfg) as p:
+                rep = p.run(stream_chain_lg(), inputs={"src": 1})
+                assert rep.ok, rep.errors[:3]
+                # batch resolution: finish over scratch accumulated by
+                # ... nothing — no chunks were delivered
+                assert p.session.read("out") == []
+                assert p.session.stream is None
+                snap = p.metrics.snapshot()["counters"]
+                assert snap["exec.streaming_edges_degraded"] == 1
+        degraded = [x for x in w
+                    if issubclass(x.category, RuntimeWarning)
+                    and "degraded" in str(x.message)]
+        assert len(degraded) == 1
+
+    def test_degrade_warning_fires_once(self):
+        exec_compiled._degrade_warned = False
+        cfg = EngineConfig(execution="compiled", num_nodes=2,
+                           stream=False)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            for _ in range(2):
+                with Pipeline(cfg) as p:
+                    rep = p.run(stream_chain_lg(), inputs={"src": 1})
+                    assert rep.ok
+        degraded = [x for x in w
+                    if issubclass(x.category, RuntimeWarning)
+                    and "degraded" in str(x.message)]
+        assert len(degraded) == 1
+
+
+# ---------------------------------------------------------------------------
+# randomized mixed graphs (seeded always; hypothesis-driven when present)
+# ---------------------------------------------------------------------------
+
+
+def _sum_finish(inputs, outputs, app):
+    for o in outputs:
+        o.write(sum(app.scratch.get("vals", [])))
+
+
+@register_app("st/sum-chunks", streaming=True, finish=_sum_finish)
+def _sum_chunks(value, app):
+    # order-insensitive accumulation: safe for multi-input interleaving
+    app.scratch.setdefault("vals", []).append(value[1])
+
+
+@register_app("st/emit-n")
+def _emit_n(inputs, outputs, app):
+    n = int(app.meta.get("params", {}).get("n", 3))
+    base = sum(i.read() for i in inputs) if inputs else 0
+    for i in range(n):
+        for o in outputs:
+            o.write((i, base + i))
+
+
+def _mixed_lg(rng: random.Random):
+    """A random fan of chains, each independently batch or streaming."""
+    width = rng.randint(1, 4)
+    g = GraphBuilder(f"mix{width}")
+    g.data("src")
+    stream_flags = []
+    for k in range(width):
+        streaming = rng.random() < 0.6
+        n_chunks = rng.randint(1, 4)
+        stream_flags.append(streaming)
+        g.component(f"p{k}", app="st/emit-n", n=n_chunks)
+        g.data(f"d{k}")
+        g.component(f"c{k}",
+                    app="st/sum-chunks" if streaming else "st/last-double")
+        g.data(f"o{k}")
+        g.chain("src", f"p{k}", f"d{k}")
+        g.connect(f"d{k}", f"c{k}", streaming=streaming)
+        g.chain(f"c{k}", f"o{k}")
+    return g.graph(), width
+
+
+def _check_mixed_equivalence(seed: int) -> None:
+    rng = random.Random(seed)
+    lg, width = _mixed_lg(rng)
+    finals = {}
+    for mode in ("objects", "compiled"):
+        with Pipeline(EngineConfig(execution=mode, num_nodes=2)) as p:
+            rep = p.run(lg, inputs={"src": 1})
+            assert rep.ok, (seed, mode, rep.errors[:3])
+            if mode == "objects":
+                finals[mode] = {f"o{k}":
+                                p.session.drops[f"o{k}"].payload.read()
+                                for k in range(width)}
+            else:
+                finals[mode] = {f"o{k}": p.session.read(f"o{k}")
+                                for k in range(width)}
+    assert finals["compiled"] == finals["objects"], seed
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 17, 42])
+def test_mixed_graph_equivalence_seeded(seed):
+    _check_mixed_equivalence(seed)
+
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as hyp_st
+except ImportError:                                    # pragma: no cover
+    pass
+else:
+    @settings(max_examples=15, deadline=None)
+    @given(hyp_st.integers(min_value=0, max_value=10_000))
+    def test_mixed_graph_equivalence_hypothesis(seed):
+        _check_mixed_equivalence(seed)
