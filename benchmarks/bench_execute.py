@@ -45,7 +45,9 @@ from __future__ import annotations
 import argparse
 import gc
 import json
+import os
 import resource
+import signal
 import statistics
 import time
 from pathlib import Path
@@ -53,9 +55,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import (EngineConfig, FailureScript, GraphTemplate,
-                        Pipeline, ResilienceConfig, StreamConfig,
-                        TelemetryConfig, execute_frontier,
+from repro.core import (EngineConfig, ExecHooks, FailureScript,
+                        GraphTemplate, Pipeline, ResilienceConfig,
+                        StreamConfig, TelemetryConfig, execute_frontier,
                         export_chrome_trace, make_cluster, register_app)
 from repro.dsl import GraphBuilder
 
@@ -436,6 +438,212 @@ def run_streaming_tier(target_drops: int, repeats: int = 3,
     }
 
 
+# ---------------------------------------------------------------------------
+# multiproc tier: CPU-bound throughput threads-vs-processes + recovery
+# with a real SIGKILL (workers="process", PR-10)
+# ---------------------------------------------------------------------------
+
+MULTIPROC_SPIN = 60_000    # pure-Python iterations per app: GIL-bound work
+MULTIPROC_ARR_N = 64 * 1024   # 512 KiB float64 arrays for the zero-copy leg
+
+# NOTE on apps: spawn workers resolve these by module reference, so they
+# must live at module level (this script re-imports cleanly in children
+# because all driver code is under the __main__ guard).
+
+
+@register_app("bench/cpu-spin")
+def _cpu_spin(inputs, outputs, app):
+    v = inputs[0].read() if inputs else 0
+    acc = int(v) if np.isscalar(v) else 0
+    for i in range(MULTIPROC_SPIN):
+        acc = (acc + i * 31) % 1000003
+    for o in outputs:
+        o.write(acc)
+
+
+@register_app("bench/arr-make")
+def _arr_make(inputs, outputs, app):
+    seed = inputs[0].read() if inputs else 1
+    for o in outputs:
+        o.write(np.full(MULTIPROC_ARR_N, float(seed)))
+
+
+@register_app("bench/arr-scale")
+def _arr_scale(inputs, outputs, app):
+    v = inputs[0].read()
+    for o in outputs:
+        o.write(v * 2.0)
+
+
+@register_app("bench/arr-reduce")
+def _arr_reduce(inputs, outputs, app):
+    total = sum(float(np.asarray(i.read()).sum()) for i in inputs)
+    for o in outputs:
+        o.write(total)
+
+
+def make_spin_lg(width: int, depth: int = 2):
+    g = GraphBuilder(f"spin{width}")
+    g.data("src", volume=1.0)
+    with g.scatter("sc", width):
+        names = []
+        for i in range(depth):
+            g.component(f"w{i}", app="bench/cpu-spin", time=1.0)
+            g.data(f"d{i}", volume=1.0)
+            names += [f"w{i}", f"d{i}"]
+    with g.gather("ga", width):
+        g.component("r", app="bench/cpu-spin", time=1.0)
+    g.data("out")
+    g.chain("src", *names, "r", "out")
+    return g.graph()
+
+
+def make_array_lg(width: int):
+    g = GraphBuilder(f"arr{width}")
+    g.data("src", volume=1.0)
+    with g.scatter("sc", width):
+        g.component("mk", app="bench/arr-make", time=1.0)
+        g.data("arr", volume=1.0)
+        g.component("up", app="bench/arr-scale", time=1.0)
+        g.data("arr2", volume=1.0)
+    with g.gather("ga", width):
+        g.component("r", app="bench/arr-reduce", time=1.0)
+    g.data("out")
+    g.chain("src", "mk", "arr", "up", "arr2", "r", "out")
+    return g.graph()
+
+
+def _count_pickled_arrays(master) -> Dict[str, object]:
+    """Wrap each island plane's ``encode`` to count ndarray values that
+    fell back to inline pickling (the zero-copy claim being gated)."""
+    counter = {"n": 0}
+    planes = {}
+    for nm in master.node_managers().values():
+        plane = getattr(nm, "plane", None)
+        if plane is None or id(plane) in planes:
+            continue
+        planes[id(plane)] = plane
+        orig = plane.encode
+
+        def encode(value, _orig=orig):
+            wire = _orig(value)
+            if wire[0] == "raw" and isinstance(value, np.ndarray):
+                counter["n"] += 1
+            return wire
+
+        plane.encode = encode
+    return {"counter": counter, "planes": list(planes.values())}
+
+
+def _spin_walls(mode: str, lg, num_workers: int, repeats: int,
+                timeout: float) -> tuple:
+    """Median execute wall for one worker mode over a warm cluster (one
+    ``make_cluster`` per mode, so process workers spawn once, outside
+    the measured repeats — matching the thread pool's warm threads)."""
+    master, nodes = make_cluster(num_workers, 1, 4, workers=mode)
+    try:
+        tpl = GraphTemplate.build(lg, nodes, dop=num_workers)
+        executors = master.node_executors()
+        n = tpl.num_drops
+        walls: List[float] = []
+        for k in range(repeats + 1):
+            session = tpl.materialize(f"mp-{mode}-{k}", master=master)
+            session.write("src", 1)
+            gc.collect()
+            t0 = time.monotonic()
+            ok = execute_frontier(session, timeout=timeout,
+                                  executors=executors)
+            wall = time.monotonic() - t0
+            assert ok and not session.error_info, \
+                f"multiproc tier failed ({mode})"
+            if k > 0:          # run 0 is warmup (spawn / allocator)
+                walls.append(wall)
+    finally:
+        master.shutdown()
+    return statistics.median(walls), n
+
+
+def run_multiproc_tier(num_workers: int = 4, repeats: int = 3,
+                       timeout: float = 600.0) -> Dict[str, float]:
+    """Threads-vs-processes on CPU-bound pure-Python apps, the zero-copy
+    shared-memory leg, and recovery from a real worker SIGKILL.
+
+    ``proc_speedup`` is process-over-thread throughput on GIL-bound
+    work: ~num_workers on a box with that many free cores, ~1.0 on a
+    single-core runner (both modes time-slice one core — parity IS the
+    ceiling there, which is why the committed floor is calibrated from
+    measurement, not fixed at the multi-core ideal)."""
+    lg = make_spin_lg(width=2 * num_workers)
+    thread_wall, n = _spin_walls("thread", lg, num_workers, repeats,
+                                 timeout)
+    proc_wall, _ = _spin_walls("process", lg, num_workers, repeats,
+                               timeout)
+
+    # zero-copy leg: every inter-app array edge must ride the plane
+    master, nodes = make_cluster(num_workers, 1, 4, workers="process")
+    try:
+        probe = _count_pickled_arrays(master)
+        tpl = GraphTemplate.build(make_array_lg(width=num_workers),
+                                  nodes, dop=num_workers)
+        session = tpl.materialize("mp-arrays", master=master)
+        session.write("src", 1)
+        ok = execute_frontier(session, timeout=timeout,
+                              executors=master.node_executors())
+        assert ok and not session.error_info, "zero-copy leg failed"
+        pickled_arrays = probe["counter"]["n"]
+        shm_results = sum(p.stats["shm_results"]
+                          for p in probe["planes"])
+        shm_exports = sum(p.stats["shm_exports"] +
+                          p.stats["shm_passthrough"]
+                          for p in probe["planes"])
+    finally:
+        master.shutdown()
+
+    # recovery leg: SIGKILL one worker at >=30% completion mid-run and
+    # let WorkerLost -> lineage recovery finish the session
+    killed: List[int] = []
+
+    def on_wave(session, done, total):
+        if not killed and done / max(total, 1) >= 0.3:
+            ex = p.master.node_managers()["node0"].executor
+            if getattr(ex, "pid", None) is not None:
+                os.kill(ex.pid, signal.SIGKILL)
+                killed.append(ex.pid)
+
+    with Pipeline(EngineConfig(num_nodes=num_workers, workers_per_node=4,
+                               dop=num_workers, execution="compiled",
+                               workers="process",
+                               resilience=ResilienceConfig())) as p:
+        p.translate(make_spin_lg(width=2 * num_workers))
+        p.deploy()
+        rep = p.execute(timeout=timeout, inputs={"src": 1},
+                        hooks=ExecHooks(on_wave=on_wave))
+        assert rep.ok, (rep.state, rep.errors[:3])
+        assert killed, "kill hook never fired"
+        assert rep.recoveries >= 1, "SIGKILL did not trigger recovery"
+        recovery_wall = rep.wall_time
+        recoveries = rep.recoveries
+        recovered_drops = rep.recovered_drops
+
+    return {
+        "tier": num_workers,
+        "mode": "multiproc",
+        "drops": n,
+        "num_workers": num_workers,
+        "spin_iters": MULTIPROC_SPIN,
+        "thread_wall_s": round(thread_wall, 4),
+        "proc_wall_s": round(proc_wall, 4),
+        "drops_per_s": round(n / proc_wall, 1),
+        "proc_speedup": round(thread_wall / proc_wall, 3),
+        "pickled_array_values": pickled_arrays,
+        "shm_array_transfers": shm_exports + shm_results,
+        "recovery_wall_s": round(recovery_wall, 4),
+        "recoveries": recoveries,
+        "recovered_drops": recovered_drops,
+        "rss_mb_peak": peak_rss_mb(),
+    }
+
+
 DEFAULT_MAX_OBJECT_DROPS = 100_000   # objects cost ~100us+/drop; 1M would
 #                                      take minutes and gigabytes
 
@@ -473,6 +681,17 @@ def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
                   f"execute_s={r['execute_s']};"
                   f"trace={r['trace_file']}")
             continue
+        if r["mode"] == "multiproc":
+            print(f"execute_multiproc_speedup[workers={r['num_workers']}],"
+                  f"{r['proc_speedup']},"
+                  f"thread_wall_s={r['thread_wall_s']};"
+                  f"proc_wall_s={r['proc_wall_s']};"
+                  f"drops_per_s={r['drops_per_s']};"
+                  f"pickled_array_values={r['pickled_array_values']};"
+                  f"shm_array_transfers={r['shm_array_transfers']};"
+                  f"recovery_wall_s={r['recovery_wall_s']};"
+                  f"recoveries={r['recoveries']}")
+            continue
         if r["mode"] == "telemetry":
             print(f"execute_telemetry_overhead_pct[n={r['drops']}],"
                   f"{r['telemetry_overhead_pct']},"
@@ -507,10 +726,13 @@ def emit(rows: List[Dict[str, float]], merge: bool = False) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--tier", choices=["standard", "recovery", "streaming"],
+    ap.add_argument("--tier", choices=["standard", "recovery", "streaming",
+                                       "multiproc"],
                     default="standard",
                     help="'recovery' = node-kill + lineage-recovery suite; "
-                         "'streaming' = chunk-lane overlap measurement")
+                         "'streaming' = chunk-lane overlap measurement; "
+                         "'multiproc' = threads-vs-processes throughput, "
+                         "zero-copy plane audit + real-SIGKILL recovery")
     ap.add_argument("--tiers", type=int, nargs="+", default=None,
                     help="target drop counts")
     ap.add_argument("--max-object-drops", type=int,
@@ -531,6 +753,9 @@ def main() -> None:
     elif args.tier == "streaming":
         tiers = tuple(args.tiers or [1_000])
         emit([run_streaming_tier(t) for t in tiers], merge=True)
+    elif args.tier == "multiproc":
+        tiers = tuple(args.tiers or [4])
+        emit([run_multiproc_tier(t) for t in tiers], merge=True)
     else:
         tiers = tuple(args.tiers or [1_000, 10_000, 100_000])
         emit(run(tiers, args.max_object_drops), merge=True)

@@ -191,11 +191,59 @@ def streaming_metrics(path: Path) -> Dict[str, float]:
     return out
 
 
+def multiproc_metrics(path: Path) -> Dict[str, float]:
+    """Floor metrics from bench_execute multiproc rows:
+    ``execute:multiproc:<tier>:proc_speedup`` — process-over-thread
+    throughput on GIL-bound work.  (The tier's ``drops_per_s`` floor is
+    collected by the generic :func:`execute_metrics` pass.)  The
+    committed floor is calibrated from measurement on the CI box — on a
+    single-core runner both worker modes time-slice one CPU and parity
+    (~1.0) is the physical ceiling; on >=4 free cores expect >=2x and
+    raise the floor."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if r.get("mode") != "multiproc" or "proc_speedup" not in r:
+            continue
+        try:
+            out[f"execute:multiproc:{r['tier']}:proc_speedup"] = \
+                float(r["proc_speedup"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
+
+
+def multiproc_ceilings(path: Path) -> Dict[str, float]:
+    """Ceiling metrics from bench_execute multiproc rows:
+    ``execute:multiproc:<tier>:pickled_array_values`` — array values
+    that fell off the shared-memory plane onto pickle.  The baseline is
+    0.0: any pickled array is a zero-copy regression."""
+    if not path.exists():
+        return {}
+    with open(path) as fh:
+        rows = json.load(fh).get("rows", [])
+    out: Dict[str, float] = {}
+    for i, r in enumerate(rows):
+        if r.get("mode") != "multiproc" \
+                or "pickled_array_values" not in r:
+            continue
+        try:
+            out[f"execute:multiproc:{r['tier']}:pickled_array_values"] = \
+                float(r["pickled_array_values"])
+        except (KeyError, TypeError, ValueError) as exc:
+            _warn(f"skipping malformed row {i} in {path.name}: {exc!r}")
+    return out
+
+
 def collect_current(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
     out = execute_metrics(results_dir / "bench_execute.json")
     out.update(translate_metrics(results_dir / "bench_translate.json"))
     out.update(serve_metrics(results_dir / "bench_serve.json"))
     out.update(streaming_metrics(results_dir / "bench_execute.json"))
+    out.update(multiproc_metrics(results_dir / "bench_execute.json"))
     return out
 
 
@@ -204,6 +252,7 @@ def collect_ceilings(results_dir: Path = RESULTS_DIR) -> Dict[str, float]:
     number can never be gated in the wrong direction."""
     out = serve_ceilings(results_dir / "bench_serve.json")
     out.update(telemetry_ceilings(results_dir / "bench_execute.json"))
+    out.update(multiproc_ceilings(results_dir / "bench_execute.json"))
     return out
 
 

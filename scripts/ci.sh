@@ -39,6 +39,8 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/bench_execute.py --tier streaming --tiers 1000
     echo "== serve smoke bench (10k drops, resident manager sessions/s) =="
     python benchmarks/bench_serve.py --tiers 10000
+    echo "== multiproc bench (threads vs process workers, shm plane, SIGKILL recovery) =="
+    python benchmarks/bench_execute.py --tier multiproc
     echo "== bench-regression gate (results vs results/baseline.json) =="
     python scripts/check_bench.py
 fi

@@ -21,7 +21,10 @@ from .logical import (GraphValidationError, LogicalGraph,
                       LogicalGraphTemplate)
 from .manager import AdmissionError, EngineManager, SessionTicket
 from .managers import (DataIslandDropManager, MasterDropManager,
-                       NodeDropManager, get_app, make_cluster, register_app)
+                       NodeDropManager, ProcNodeDropManager, get_app,
+                       make_cluster, register_app)
+from .procpool import (PayloadPlane, ProcExecutor, WorkerLost,
+                       WorkerTimeout)
 from .mapping import NodeInfo, map_partitions, stamp_nodes
 from .partition import PartitionResult, min_res, min_time
 from .schedule import critical_path, partition_stats, simulate_makespan
@@ -47,11 +50,13 @@ __all__ = [
     "MasterDropManager", "MemoryPayload", "MetricsRegistry",
     "NodeDropManager", "NodeInfo",
     "NullPayload", "PartitionResult", "Payload", "PayloadError",
-    "PhysicalGraphTemplate", "Pipeline", "RecordingListener",
+    "PayloadPlane", "PhysicalGraphTemplate", "Pipeline",
+    "ProcExecutor", "ProcNodeDropManager", "RecordingListener",
     "ResilienceConfig", "ResilienceStats", "ResilientRunner", "RetryPolicy",
     "Session", "SessionState", "SessionTicket", "Span", "StragglerPolicy",
     "StragglerWatcher", "StreamAbort", "StreamConfig", "StreamTable",
-    "TelemetryConfig", "TemplateCache", "Timeline",
+    "TelemetryConfig", "TemplateCache", "Timeline", "WorkerLost",
+    "WorkerTimeout",
     "compile_unroll", "critical_path",
     "elastic_remap", "execute_frontier", "execute_resilient",
     "export_chrome_trace", "get_app",

@@ -38,6 +38,7 @@ class EngineConfig:
     num_nodes: int = 2
     num_islands: int = 1
     workers_per_node: int = 4
+    workers: str = "thread"   # "thread" | "process" (crash-isolated spawn workers)
     # translation policy
     dop: int = 8
     algorithm: str = "min_time"
@@ -59,6 +60,19 @@ class EngineConfig:
         """
         if self.execution not in ("objects", "compiled"):
             raise ValueError(f"unknown execution mode {self.execution!r}")
+        if self.workers not in ("thread", "process"):
+            raise ValueError(f"unknown workers mode {self.workers!r} "
+                             "(expected 'thread' or 'process')")
+        if self.workers == "process" and self.execution != "compiled":
+            raise ValueError(
+                "workers='process' is the compiled engine's payload-plane "
+                "mode; the object path dispatches per-drop callbacks that "
+                "cannot cross a process boundary (use execution='compiled')")
+        if self.workers == "process" and self.manager is not None:
+            raise ValueError(
+                "workers= shapes the Pipeline-owned cluster; a resident "
+                "EngineManager owns its own (pass workers='process' to "
+                "EngineManager instead)")
         if self.execution == "compiled" and (self.enable_dlm
                                              or self.enable_stragglers):
             raise ValueError(

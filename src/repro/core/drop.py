@@ -60,6 +60,15 @@ class PayloadError(RuntimeError):
     pass
 
 
+def buffer_nbytes(value) -> "int | None":
+    """Byte size of a buffer-protocol value (bytes, bytearray, array.array,
+    mmap, ...) without serialising it; None for opaque objects."""
+    try:
+        return memoryview(value).nbytes
+    except TypeError:
+        return None
+
+
 class Payload:
     """I/O abstraction over a Drop's data (paper §4.2 option 1).
 
@@ -139,7 +148,13 @@ class MemoryPayload(Payload):
         if v is None:
             return 0
         if hasattr(v, "nbytes"):
-            return int(v.nbytes)
+            try:
+                return int(v.nbytes)
+            except TypeError:
+                pass
+        n = buffer_nbytes(v)
+        if n is not None:
+            return n
         try:
             return len(pickle.dumps(v, protocol=pickle.HIGHEST_PROTOCOL))
         except Exception:

@@ -99,7 +99,7 @@ class Pipeline:
         else:
             self.master, self.nodes = make_cluster(
                 config.num_nodes, config.num_islands,
-                config.workers_per_node)
+                config.workers_per_node, workers=config.workers)
             self._owns_cluster = True
         # mutable working copies — benchmarks and tests tune these on a
         # built Pipeline (e.g. ``p.resilience = ResilienceConfig(...)``);

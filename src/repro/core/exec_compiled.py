@@ -60,6 +60,7 @@ import numpy as np
 from .managers import _APP_REGISTRY, BUILTIN_FAST_APPS, get_app
 from .pgt import (KIND_APP, KIND_DATA, CompiledPGT, csr_gather,
                   csr_gather_with_counts)
+from .procpool import WorkerLost
 from .session import (PK_FILE, PK_NULL, ST_COMPLETED, ST_ERROR, ST_INIT,
                       CompiledDropRef, CompiledSession)
 from .streaming import StreamAbort, StreamConfig, StreamTable
@@ -173,6 +174,28 @@ class _DataRef(CompiledDropRef):
         return int(getattr(v, "nbytes", 0))
 
 
+class _FencedDataRef(_DataRef):
+    """Output ref handed to streaming chunk handlers: writes are fenced by
+    the ``StreamTable`` generation, so a wedged consumer thread from a
+    shut-down lane that eventually unwedges cannot mutate payloads/rings
+    behind a resumable reopen."""
+
+    __slots__ = ("tbl", "gen")
+
+    def __init__(self, session: CompiledSession, idx: int,
+                 tbl: StreamTable, gen: int) -> None:
+        super().__init__(session, idx)
+        self.tbl = tbl
+        self.gen = gen
+
+    def write(self, value: Any) -> None:
+        if self.tbl.generation != self.gen:
+            raise StreamAbort(
+                f"stale stream-lane write fenced (lane generation {self.gen}, "
+                f"table at {self.tbl.generation})")
+        super().write(value)
+
+
 class _AppRef(CompiledDropRef):
     """Duck-types the slice of ``AppDrop`` an app function consumes
     (``app.meta`` with oid/construct/params, ``app.uid``, ``app.node``,
@@ -203,12 +226,13 @@ class _StreamAppRef(_AppRef):
     re-accumulates from the re-delivered stream).  ``outputs`` lets a
     chunk handler emit downstream chunks incrementally."""
 
-    __slots__ = ("outputs",)
+    __slots__ = ("outputs", "gen")
 
     def __init__(self, session: CompiledSession, idx: int,
-                 outputs: List[_DataRef]) -> None:
+                 outputs: List[_DataRef], gen: int = 0) -> None:
         super().__init__(session, idx)
         self.outputs = outputs
+        self.gen = gen
 
 
 def _drop_meta(pgt: CompiledPGT, idx: int) -> Dict[str, Any]:
@@ -237,6 +261,10 @@ class _Dispatch:
         # nodes overlap (one worker task per node batch); None/empty
         # keeps the sequential in-thread dispatch
         self.executors = executors or {}
+        # process-backed executors (ProcExecutor: has run_batch) get their
+        # Python-app batches shipped to the node's worker process
+        self.proc_nodes = {name for name, ex in self.executors.items()
+                           if hasattr(ex, "run_batch")}
         n = pgt.num_drops
         self.out_indptr, self.out_cols, _ = pgt.out_csr_with_eid()
         self.in_indptr, self.in_cols, in_eid = pgt.in_csr_with_eid()
@@ -374,7 +402,7 @@ class _Dispatch:
                 and self.hooks.python_runner is not None:
             self.hooks.python_runner(self, ids)
             return
-        if self.executors and ids.size > 1:
+        if self.executors and ids.size and (self.proc_nodes or ids.size > 1):
             self._run_python_threaded(ids)
             return
         self._run_python_seq(ids)
@@ -394,7 +422,7 @@ class _Dispatch:
         deadline overrun in any batch surfaces as one ``_WaveTimeout``
         after all batches stopped — the state array stays resumable."""
         batches = node_batches(self.pgt, ids)
-        if len(batches) <= 1:
+        if len(batches) <= 1 and not self.proc_nodes:
             self._run_python_seq(ids)
             return
         node_ids = self.pgt.node_ids
@@ -406,9 +434,26 @@ class _Dispatch:
             ex = self.executors.get(names[nid]) if nid >= 0 else None
             if ex is None:
                 inline.append(batch)
+            elif hasattr(ex, "run_batch"):
+                # process-backed node: ship the batch to the worker, except
+                # stream producers/consumers — their chunk-granular writes
+                # must land in the parent's rings as they happen
+                keep = np.ones(batch.size, dtype=bool)
+                if self.stream_prod is not None:
+                    keep &= ~self.stream_prod[batch]
+                if self.stream_cons is not None:
+                    keep &= ~self.stream_cons[batch]
+                local = batch[~keep]
+                remote = batch[keep]
+                if local.size:
+                    inline.append(local)
+                if remote.size:
+                    futures.append(
+                        ex.submit(self._run_proc_batch, remote, ex, nid))
             else:
                 futures.append(ex.submit(self._run_python_seq, batch))
         timed_out = False
+        lost: List[str] = []
         for batch in inline:
             try:
                 self._run_python_seq(batch)
@@ -420,6 +465,12 @@ class _Dispatch:
                 f.result()
             except _WaveTimeout:
                 timed_out = True
+            except WorkerLost as wl:
+                lost.extend(wl.nodes)
+        if lost:
+            # takes precedence over a deadline overrun: drops on the lost
+            # node(s) can never finish without recovery
+            raise WorkerLost(sorted(set(lost)))
         if timed_out:
             raise _WaveTimeout
 
@@ -557,6 +608,107 @@ class _Dispatch:
         if self.tl is not None:
             self.tl.stamp(int(i), t0, time.monotonic(), self.wave)
 
+    # -- process-backed dispatch (ProcExecutor mailbox) ----------------------
+    def proc_spec(self, i: int) -> Dict[str, Any]:
+        """Self-contained work order for registry app ``i``: the function
+        object (pickled by reference — the worker resolves it via module
+        re-import), pre-read COMPLETED inputs in oracle order, and output
+        drop indices.  A parent-side failure (unknown app) is returned as
+        ``{"parent_tb": ...}`` so the caller errors the drop locally."""
+        s, pgt = self.s, self.pgt
+        i = int(i)
+        spec: Dict[str, Any] = {"idx": i, "uid": pgt.uid_of(i)}
+        try:
+            name = pgt.app_of(i)
+            func = get_app(name) if name else None
+        except Exception:  # noqa: BLE001 - registry miss -> drop ERROR
+            spec["parent_tb"] = traceback.format_exc(limit=8)
+            return spec
+        spec["func"] = func
+        if func is None:
+            return spec
+        meta = _drop_meta(pgt, i)
+        meta["execution_time"] = float(pgt.exec_arr[i])
+        spec["meta"] = meta
+        lo, hi = self.in_indptr[i], self.in_indptr[i + 1]
+        ins = self.in_cols[lo:hi]
+        if self.in_stream is not None:
+            ins = ins[~self.in_stream[lo:hi]]
+        ok = ins[s.drop_state[ins] == ST_COMPLETED]
+        order = sorted((int(j) for j in ok),
+                       key=lambda j: (pgt.oid_of(j), pgt.uid_of(j)))
+        inputs = []
+        for j in order:
+            value, err = None, None
+            try:
+                value = s._read_idx(j)
+            except Exception as exc:  # noqa: BLE001 - re-raised at read()
+                err = f"{type(exc).__name__}: {exc}"
+            inputs.append((pgt.uid_of(j), _drop_meta(pgt, j), value, err))
+        spec["inputs"] = inputs
+        spec["outputs"] = [
+            (int(j), pgt.uid_of(int(j)), _drop_meta(pgt, int(j)))
+            for j in self.out_cols[self.out_indptr[i]:self.out_indptr[i + 1]]]
+        return spec
+
+    def _run_proc_batch(self, batch: np.ndarray, ex: Any, nid: int) -> None:
+        """Ship one node batch to its worker process and apply the reply.
+
+        Raises :class:`WorkerLost` if the worker dies (caller drains all
+        batches first) and ``_WaveTimeout`` on budget exhaustion — drops
+        the worker never reached stay INIT, so the run is resumable."""
+        s = self.s
+        specs: List[Dict[str, Any]] = []
+        for i in batch.tolist():
+            spec = self.proc_spec(i)
+            tb = spec.get("parent_tb")
+            if tb is not None:
+                t = time.monotonic()
+                s.drop_state[i] = ST_ERROR
+                s.record_error(i, tb)
+                if self.tl is not None:
+                    self.tl.stamp(int(i), t, t, self.wave, node=nid)
+            else:
+                specs.append(spec)
+        budget = self.deadline - time.monotonic()
+        if budget <= 0:
+            raise _WaveTimeout
+        results = ex.run_batch(specs, budget)
+        if self._apply_proc_results(results, nid):
+            raise _WaveTimeout
+
+    def _apply_proc_results(self, results: List[Dict[str, Any]],
+                            nid: int) -> bool:
+        """Replay worker results into the session; True if any timed out.
+
+        Concurrent calls (one per node thread) touch row-disjoint state,
+        the same contract as the threaded in-process dispatch.  Worker
+        stamps are CLOCK_MONOTONIC, comparable across Linux processes, so
+        they merge into the Timeline unadjusted."""
+        s = self.s
+        timed_out = False
+        for r in results:
+            i = int(r["idx"])
+            status = r["status"]
+            if status == "timeout":
+                timed_out = True
+                continue
+            if status == "ok":
+                try:
+                    for j, v in r["writes"]:
+                        s._write_idx(int(j), v)
+                    s.drop_state[i] = ST_COMPLETED
+                except Exception:  # noqa: BLE001 - replay failure -> ERROR
+                    s.drop_state[i] = ST_ERROR
+                    s.record_error(i, traceback.format_exc(limit=8))
+            else:
+                s.drop_state[i] = ST_ERROR
+                s.record_error(i, r["tb"])
+            if self.tl is not None:
+                t1 = r.get("t1", time.monotonic())
+                self.tl.stamp(i, r.get("t0", t1), t1, self.wave, node=nid)
+        return timed_out
+
 
 # ---------------------------------------------------------------------------
 # The streaming dispatch lane
@@ -599,6 +751,10 @@ class _StreamLane:
         self.ctx = ctx
         self.s = ctx.s
         self.table = table
+        # lane generation: if shutdown leaves a consumer thread alive it
+        # fences the table, and refs/loops of this generation go inert
+        self.gen = table.generation
+        self.join_grace = float(table.config.shutdown_grace_s)
         self.hooks = ctx.hooks
         self.threads: Dict[int, threading.Thread] = {}
         self.done: Dict[int, threading.Event] = {}
@@ -632,14 +788,33 @@ class _StreamLane:
             self.activate(d)
 
     def shutdown(self) -> None:
-        """Stop consumer threads; buffered chunks + cursors persist."""
+        """Stop consumer threads; buffered chunks + cursors persist.
+
+        Joins get one shared ``shutdown_grace_s`` budget.  A consumer
+        wedged in its chunk handler survives the join — previously it
+        leaked silently and could still mutate rings/payloads after a
+        resumable reopen.  Now every survivor is reported by consumer uid
+        and the table generation is fenced: the survivor's refs raise
+        ``StreamAbort`` on write and its loop exits at the next wakeup."""
         tbl = self.table
         tbl.shutdown()            # unblocks producers stuck in push
         with tbl.cond:
             self._shutdown = True
             tbl.cond.notify_all()
-        for t in list(self.threads.values()):
-            t.join(timeout=5.0)
+        deadline = time.monotonic() + self.join_grace
+        survivors: List[int] = []
+        for c, t in list(self.threads.items()):
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+            if t.is_alive():
+                survivors.append(c)
+        if survivors:
+            uids = [self.ctx.pgt.uid_of(c) for c in survivors]
+            warnings.warn(
+                f"{len(survivors)} stream consumer thread(s) still alive "
+                f"{self.join_grace:.1f}s after lane shutdown "
+                f"(consumers: {uids}); fencing stale-lane writes",
+                RuntimeWarning, stacklevel=2)
+            tbl.fence()
         tbl.detach()
 
     # -- activation (first chunk) -------------------------------------------
@@ -655,12 +830,18 @@ class _StreamLane:
 
     def app_ref(self, c: int) -> _StreamAppRef:
         ref = self.table.app_refs.get(c)
-        if ref is None:
+        if ref is None or ref.gen != self.gen:
             ctx = self.ctx
-            outs = [_DataRef(self.s, int(j)) for j in
+            outs = [_FencedDataRef(self.s, int(j), self.table, self.gen)
+                    for j in
                     ctx.out_cols[ctx.out_indptr[c]:ctx.out_indptr[c + 1]]]
-            ref = _StreamAppRef(self.s, c, outs)
-            self.table.app_refs[c] = ref
+            fresh = _StreamAppRef(self.s, c, outs, gen=self.gen)
+            if ref is not None:
+                # cross-chunk accumulation survives lane turnover; only
+                # the fenced output refs are re-minted per generation
+                fresh.scratch = ref.scratch
+            self.table.app_refs[c] = fresh
+            ref = fresh
         return ref
 
     # -- the consumer thread ------------------------------------------------
@@ -675,8 +856,8 @@ class _StreamLane:
         on_chunk = hk.on_stream_chunk if hk is not None else None
         while True:
             with tbl.cond:
-                if self._shutdown:
-                    return
+                if self._shutdown or tbl.generation != self.gen:
+                    return        # lane shut down / fenced as stale
                 if s.drop_state[c] != ST_INIT:
                     return        # gate-failed or cancelled externally
                 item = tbl.pop_ready_locked(c)
@@ -710,6 +891,8 @@ class _StreamLane:
         self._finalize(c)
 
     def _finalize(self, c: int) -> None:
+        if self.table.generation != self.gen:
+            return                # fenced: a fresh lane owns this consumer
         s = self.s
         ctx = self.ctx
         t0 = self.first_t0.get(c, time.monotonic())

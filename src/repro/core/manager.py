@@ -124,14 +124,15 @@ class EngineManager:
                  max_concurrent: int = 4,
                  max_pending: int = 64,
                  keep_finished: int = 32,
-                 telemetry: Optional[TelemetryConfig] = None) -> None:
+                 telemetry: Optional[TelemetryConfig] = None,
+                 workers: str = "thread") -> None:
         if max_concurrent < 1:
             raise ValueError("max_concurrent must be >= 1")
         if max_pending < 0:
             raise ValueError("max_pending must be >= 0")
         from .managers import make_cluster
         self.master, self.nodes = make_cluster(
-            num_nodes, num_islands, workers_per_node)
+            num_nodes, num_islands, workers_per_node, workers=workers)
         self.dop = dop
         self.algorithm = algorithm
         self.deadline = deadline

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -28,6 +28,7 @@ from .drop import AppDrop, DataDrop, Drop, DropState, make_payload
 from .events import EventBus
 from .mapping import NodeInfo
 from .pgt import CompiledPGT
+from .procpool import PayloadPlane, ProcExecutor, TrackingThreadPool
 from .session import CompiledSession, Session
 from .unroll import DropSpec, PhysicalGraphTemplate
 from .util import safe_uid as _safe
@@ -126,15 +127,26 @@ def _bash(inputs: List[DataDrop], outputs: List[DataDrop],
 class NodeDropManager:
     """Creates/deletes Drops for one compute node; bottom of the hierarchy."""
 
+    #: seconds shutdown() waits for in-flight app calls before abandoning
+    #: them and failing their sessions
+    SHUTDOWN_GRACE_S = 5.0
+
     def __init__(self, info: NodeInfo, max_workers: int = 4) -> None:
         self.info = info
-        self.executor = ThreadPoolExecutor(
-            max_workers=max_workers,
-            thread_name_prefix=f"ndm-{info.name}")
+        self.executor = self._make_executor(max_workers)
         self.sessions: Dict[str, Dict[str, Drop]] = {}
         # compiled sessions: session id -> drop-id index slice on this node
         self.compiled_sessions: Dict[str, np.ndarray] = {}
+        # sessions deployed here, weakly held so shutdown can fail the ones
+        # it abandons work for without pinning closed sessions in memory
+        self._session_refs: "weakref.WeakValueDictionary[str, Any]" = \
+            weakref.WeakValueDictionary()
         self._lock = threading.Lock()
+
+    def _make_executor(self, max_workers: int) -> TrackingThreadPool:
+        return TrackingThreadPool(
+            max_workers=max_workers,
+            thread_name_prefix=f"ndm-{self.info.name}")
 
     @property
     def name(self) -> str:
@@ -157,6 +169,7 @@ class NodeDropManager:
             session.add_drop(drop)
         with self._lock:
             self.sessions.setdefault(session.session_id, {}).update(created)
+        self._session_refs[session.session_id] = session
         return created
 
     def _instantiate(self, spec: DropSpec, bus: EventBus) -> Drop:
@@ -190,6 +203,7 @@ class NodeDropManager:
         """
         with self._lock:
             self.compiled_sessions[session.session_id] = indices
+        self._session_refs[session.session_id] = session
         session.node_slices[self.name] = indices
 
     # -- failure simulation -----------------------------------------------------
@@ -201,7 +215,69 @@ class NodeDropManager:
         self.info.alive = False
 
     def shutdown(self) -> None:
+        """Drain in-flight app calls with a bounded grace, then stop the pool.
+
+        ``executor.shutdown(wait=False, cancel_futures=True)`` alone abandons
+        calls mid-write: a session shut down during dispatch was left
+        non-terminal with half-written payloads.  Now running + queued work
+        gets ``SHUTDOWN_GRACE_S`` seconds to finish; anything still pending
+        after that is cancelled and every non-terminal session deployed here
+        is marked FAILED with an error naming the abandonment."""
+        leftover = self.executor.drain(self.SHUTDOWN_GRACE_S)
         self.executor.shutdown(wait=False, cancel_futures=True)
+        if leftover:
+            self._fail_open_sessions(len(leftover))
+
+    def _fail_open_sessions(self, n_inflight: int) -> None:
+        reason = (f"node {self.name} shut down with {n_inflight} in-flight "
+                  f"app call(s) abandoned after {self.SHUTDOWN_GRACE_S}s "
+                  "grace; payloads may be partially written")
+        for session in list(self._session_refs.values()):
+            fail = getattr(session, "fail", None)
+            if fail is not None:
+                fail(reason)
+
+
+class ProcNodeDropManager(NodeDropManager):
+    """Node manager whose executor is a crash-isolated spawn worker process.
+
+    Same ``node_executors()`` contract as the thread-backed manager — the
+    executor still has ``submit`` (orchestration thunks run on a small local
+    thread pool) — plus ``run_batch``, which the compiled dispatcher detects
+    and routes Python-app batches through.  All nodes of one island share a
+    :class:`~repro.core.procpool.PayloadPlane`, so intra-island array edges
+    travel as shared-memory descriptors; a dead worker flips
+    ``info.alive`` so the scheduler and resilience loop see a failed node.
+    """
+
+    def __init__(self, info: NodeInfo, plane: PayloadPlane,
+                 max_workers: int = 4,
+                 shm_min_bytes: Optional[int] = None) -> None:
+        self._plane = plane
+        self._shm_min_bytes = shm_min_bytes
+        plane.retain()
+        super().__init__(info, max_workers=max_workers)
+
+    @property
+    def plane(self) -> PayloadPlane:
+        return self._plane
+
+    def _make_executor(self, max_workers: int) -> ProcExecutor:
+        ex = ProcExecutor(self.info.name, plane=self._plane,
+                          submit_workers=max_workers,
+                          shm_min_bytes=self._shm_min_bytes)
+        ex.on_lost = self._on_worker_lost
+        return ex
+
+    def _on_worker_lost(self) -> None:
+        self.info.alive = False
+
+    def shutdown(self) -> None:
+        leftover = self.executor.drain(self.SHUTDOWN_GRACE_S)
+        self.executor.shutdown()          # stops the worker process too
+        if leftover:
+            self._fail_open_sessions(len(leftover))
+        self._plane.release()
 
 
 # ---------------------------------------------------------------------------
@@ -442,11 +518,21 @@ def _wire(session: Session, src: str, dst: str, streaming: bool) -> None:
 
 
 def make_cluster(num_nodes: int, num_islands: int = 1,
-                 workers_per_node: int = 4
+                 workers_per_node: int = 4, workers: str = "thread",
+                 shm_min_bytes: Optional[int] = None
                  ) -> Tuple[MasterDropManager, List[NodeInfo]]:
-    """Build a Master/Island/Node manager hierarchy (paper Fig. 6)."""
+    """Build a Master/Island/Node manager hierarchy (paper Fig. 6).
+
+    ``workers="process"`` gives every node a crash-isolated spawn worker
+    (:class:`ProcNodeDropManager`) and every island one shared
+    :class:`~repro.core.procpool.PayloadPlane`; ``shm_min_bytes`` tunes the
+    array-size threshold below which values ship pickled instead of via
+    shared memory (see ``docs/multiprocess.md``).
+    """
     if num_islands < 1 or num_nodes < num_islands:
         raise ValueError("need >=1 island and nodes >= islands")
+    if workers not in ("thread", "process"):
+        raise ValueError(f"unknown workers mode {workers!r}")
     nodes: List[NodeInfo] = []
     islands: List[DataIslandDropManager] = []
     per = num_nodes // num_islands
@@ -454,11 +540,21 @@ def make_cluster(num_nodes: int, num_islands: int = 1,
     idx = 0
     for i in range(num_islands):
         count = per + (1 if i < extra else 0)
-        nms = []
+        plane: Optional[PayloadPlane] = None
+        if workers == "process":
+            plane = (PayloadPlane() if shm_min_bytes is None
+                     else PayloadPlane(shm_min_bytes=shm_min_bytes))
+        nms: List[NodeDropManager] = []
         for _ in range(count):
             info = NodeInfo(name=f"node{idx}", island=f"island{i}")
             nodes.append(info)
-            nms.append(NodeDropManager(info, max_workers=workers_per_node))
+            if plane is not None:
+                nms.append(ProcNodeDropManager(
+                    info, plane, max_workers=workers_per_node,
+                    shm_min_bytes=shm_min_bytes))
+            else:
+                nms.append(NodeDropManager(info,
+                                           max_workers=workers_per_node))
             idx += 1
         islands.append(DataIslandDropManager(f"island{i}", nms))
     return MasterDropManager(islands), nodes

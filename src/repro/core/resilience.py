@@ -47,6 +47,7 @@ from .exec_compiled import ExecHooks, _DataRef, _WaveTimeout, \
     execute_frontier, node_batches
 from .managers import MasterDropManager
 from .pgt import KIND_DATA, CompiledPGT, csr_gather
+from .procpool import WorkerLost
 from .session import (PK_FILE, PK_MEMORY, PK_NULL, ST_COMPLETED, ST_ERROR,
                       ST_INIT, CompiledSession)
 
@@ -407,6 +408,10 @@ class ResilientRunner:
             try:
                 self._commit(ctx, i, *self._attempts(ctx, i), epoch=epoch,
                              t0=t0)
+            except (WorkerLost, _WaveTimeout):
+                # drop stays INIT; the poll loop below surfaces the dead
+                # node / deadline for the whole wave
+                pass
             finally:
                 with self._lock:
                     self._inflight[node] = self._inflight.get(node, 1) - 1
@@ -438,6 +443,14 @@ class ResilientRunner:
             pending = ids[state[ids] == ST_INIT]
             if pending.size == 0:
                 return
+            # a worker process that died mid-wave leaves its drops INIT
+            # forever; surface the dead home nodes so the resilient loop
+            # recovers instead of spinning to the deadline
+            dead = sorted({home[int(i)] for i in pending.tolist()
+                           if home.get(int(i)) is not None
+                           and not nms[home[int(i)]].info.alive})
+            if dead:
+                raise WorkerLost(dead)
             if time.monotonic() > ctx.deadline:
                 raise _WaveTimeout   # committed work stays; resumable
             threshold = self._threshold()
@@ -482,7 +495,9 @@ class ResilientRunner:
         def dup() -> None:
             t0 = time.monotonic()
             try:
-                buf, err = self._attempts(ctx, i)
+                # run on the TARGET node (on a process-backed cluster the
+                # duplicate executes in the target's worker process)
+                buf, err = self._attempts(ctx, i, node=target.name)
                 if err is None:
                     # a winning duplicate records the node that actually
                     # executed the drop, not its original placement
@@ -492,6 +507,11 @@ class ResilientRunner:
                 else:
                     with self._lock:
                         self.stats.speculative_losses += 1
+            except (WorkerLost, _WaveTimeout):
+                # the target died or ran out of budget: the duplicate just
+                # loses; the primary (or a recovery) still owns the drop
+                with self._lock:
+                    self.stats.speculative_losses += 1
             finally:
                 with self._lock:
                     self._inflight[target.name] = \
@@ -500,8 +520,16 @@ class ResilientRunner:
         target.executor.submit(dup)
 
     # -- staged execution with bounded retry -------------------------------
-    def _attempts(self, ctx, i: int):
-        """Run app ``i`` with staged outputs; returns (buffer, error)."""
+    def _attempts(self, ctx, i: int, node: Optional[str] = None):
+        """Run app ``i`` with staged outputs; returns (buffer, error).
+
+        ``node`` overrides the placement node (speculative duplicates run
+        on their target).  On a process-backed node the attempt ships to
+        that node's worker; :class:`WorkerLost` propagates — a dead worker
+        is a node failure, never an app error."""
+        ex = self._proc_executor(ctx, i, node)
+        if ex is not None:
+            return self._attempts_proc(ctx, i, ex)
         attempts = self.retry.max_attempts if self.retry else 1
         backoff = self.retry.backoff if self.retry else 0.0
         err: Optional[str] = None
@@ -530,6 +558,52 @@ class ResilientRunner:
                         ctx.s.metrics.counter("resilience.retries").inc()
                     if backoff:          # no sleep after the final attempt
                         time.sleep(backoff * (2 ** k))
+        return None, err
+
+    def _proc_executor(self, ctx, i: int, node: Optional[str]):
+        """The live process-backed executor app ``i`` should run on, or
+        None (thread-backed node, dead node, unplaced drop — all fall back
+        to the in-process staged path)."""
+        if node is None:
+            nid = int(ctx.pgt.node_ids[i])
+            if nid < 0:
+                return None
+            node = ctx.pgt.node_names[nid]
+        nm = self.master.node_managers().get(node)
+        if nm is None or not nm.info.alive:
+            return None
+        ex = nm.executor
+        return ex if hasattr(ex, "run_batch") else None
+
+    def _attempts_proc(self, ctx, i: int, ex):
+        """Process-backed attempt loop: same retry policy, with the app
+        executed in the node's worker and its writes returned as the
+        staged buffer for the normal first-writer-wins commit."""
+        attempts = self.retry.max_attempts if self.retry else 1
+        backoff = self.retry.backoff if self.retry else 0.0
+        err: Optional[str] = None
+        for k in range(attempts):
+            spec = ctx.proc_spec(i)
+            tb = spec.get("parent_tb")
+            if tb is not None:
+                return None, tb
+            budget = ctx.deadline - time.monotonic()
+            if budget <= 0:
+                raise _WaveTimeout
+            res = ex.run_batch([spec], budget)[0]   # WorkerLost propagates
+            if res["status"] == "ok":
+                return list(res["writes"]), None
+            if res["status"] == "timeout":
+                raise _WaveTimeout
+            err = res["tb"]
+            if k + 1 < attempts:
+                with self._lock:
+                    self.stats.retries += 1
+                    ctx.s.retries += 1
+                if ctx.s.metrics is not None:
+                    ctx.s.metrics.counter("resilience.retries").inc()
+                if backoff:
+                    time.sleep(backoff * (2 ** k))
         return None, err
 
     def _commit(self, ctx, i: int, buf, err: Optional[str],
@@ -652,10 +726,17 @@ def execute_resilient(session: CompiledSession, master: MasterDropManager,
                 executors=None if runner is not None
                 else master.node_executors(), stream=stream)
             return finished, stats
-        except NodeFailureInterrupt as nf:
+        except (NodeFailureInterrupt, WorkerLost) as nf:
+            # scripted failure (wave boundary) or a real worker-process
+            # death (mid-wave SIGKILL / crash / wedge): same recovery path
             for node in nf.nodes:
-                if master.node_managers()[node].info.alive:
+                nm = master.node_managers().get(node)
+                if nm is not None and nm.info.alive:
                     fm.fail_node(node)
+                elif node not in stats.failed_nodes:
+                    # worker death already flipped info.alive via on_lost;
+                    # keep the failure ledger consistent with fail_node
+                    stats.failed_nodes.append(node)
             if runner is not None:
                 # invalidate BEFORE the state reset: a leftover thread
                 # committing between recover() and a later invalidate()

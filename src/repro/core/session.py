@@ -39,6 +39,12 @@ class SessionState(str, enum.Enum):
     RUNNING = "RUNNING"
     FINISHED = "FINISHED"
     CANCELLED = "CANCELLED"
+    FAILED = "FAILED"
+
+
+#: session states no lifecycle transition may leave
+_TERMINAL_SESSION = {SessionState.FINISHED, SessionState.CANCELLED,
+                     SessionState.FAILED}
 
 
 _TERMINAL_DROP = {DropState.COMPLETED, DropState.ERROR, DropState.CANCELLED,
@@ -135,6 +141,17 @@ class Session:
         for d in self.drops.values():
             d.cancel()
         self.state = SessionState.CANCELLED
+        self._finished.set()
+
+    def fail(self, reason: str) -> None:
+        """Mark the session FAILED (node shutdown abandoned in-flight work,
+        lost worker, ...).  No-op once terminal."""
+        if self.state in _TERMINAL_SESSION:
+            return
+        self.error_reason = reason
+        self.state = SessionState.FAILED
+        self.bus.publish(Event("sessionFailed", self.session_id,
+                               {"reason": reason}))
         self._finished.set()
 
     # -- monitoring (paper: DMs "allow users to query and monitor graph
@@ -409,6 +426,17 @@ class CompiledSession:
     def cancel(self) -> None:
         self.drop_state[self.drop_state == ST_INIT] = ST_CANCELLED
         self.state = SessionState.CANCELLED
+        self._finished.set()
+
+    def fail(self, reason: str) -> None:
+        """Mark the session FAILED (node shutdown abandoned in-flight work,
+        lost worker, ...).  No-op once terminal."""
+        if self.state in _TERMINAL_SESSION:
+            return
+        self.error_reason = reason
+        self.state = SessionState.FAILED
+        self.bus.publish(Event("sessionFailed", self.session_id,
+                               {"reason": reason}))
         self._finished.set()
 
     def close(self) -> None:

@@ -66,12 +66,15 @@ class StreamConfig:
     enabled: bool = True
     ring_capacity: int = 64          # chunks buffered per edge before backpressure
     backpressure_poll_s: float = 0.05  # wait granularity while a ring is full
+    shutdown_grace_s: float = 5.0    # consumer-thread join budget at lane shutdown
 
     def validate(self) -> "StreamConfig":
         if self.ring_capacity < 1:
             raise ValueError("StreamConfig.ring_capacity must be >= 1")
         if self.backpressure_poll_s <= 0:
             raise ValueError("StreamConfig.backpressure_poll_s must be > 0")
+        if self.shutdown_grace_s <= 0:
+            raise ValueError("StreamConfig.shutdown_grace_s must be > 0")
         return self
 
 
@@ -148,6 +151,10 @@ class StreamTable:
         self.cond = threading.Condition()
         self._attached = False        # a dispatch lane is consuming
         self._shutdown = False
+        # stale-lane write fence: bumped by fence() when a lane shuts down
+        # with consumer threads still alive; refs minted under an older
+        # generation refuse to mutate rings/payloads afterwards
+        self.generation = 0
         self.deadline = float("inf")  # run deadline, set by attach()
         self.on_first_chunk: Optional[Callable[[int], None]] = None
         self.on_backpressure: Optional[Callable[[int, int, float], None]] = None
@@ -289,6 +296,18 @@ class StreamTable:
         with self.cond:
             self._shutdown = True
             self.cond.notify_all()
+
+    def fence(self) -> int:
+        """Invalidate every outstanding lane reference: refs minted under an
+        older generation raise :class:`StreamAbort` on write and their
+        consumer loops exit at the next wakeup.  Called when a lane shuts
+        down with wedged consumer threads still alive, so a thread that
+        eventually unwedges cannot mutate rings or payloads behind a
+        resumable reopen."""
+        with self.cond:
+            self.generation += 1
+            self.cond.notify_all()
+            return self.generation
 
     # ------------------------------------------------------------------
     # recovery integration

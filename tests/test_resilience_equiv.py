@@ -8,6 +8,9 @@ topologies.  Straggler speculation and the dispatch-layer retry policy
 are exercised on the compiled path (the object path has its own
 ``StragglerWatcher`` / ``with_retries`` tests in ``test_system.py``).
 """
+import multiprocessing
+import os
+import signal
 import threading
 import time
 
@@ -419,6 +422,68 @@ class TestRetryPolicy:
         with pytest.raises(ValueError, match="compiled"):
             Pipeline(execution="objects",
                      resilience=ResilienceConfig())
+
+
+# ---------------------------------------------------------------------------
+# real-process SIGKILL mid-wave (workers="process" recovery tier)
+# ---------------------------------------------------------------------------
+
+
+@register_app("rz_kill_node0")
+def _kill_node0(inputs, outputs, app):
+    """Doubles its input — except the first time it runs inside node0's
+    *worker process*, where it SIGKILLs itself mid-wave.  The gate makes
+    the same graph fault-free on the object engine (no worker processes)
+    and after recovery (the drop migrates off node0)."""
+    if (multiprocessing.parent_process() is not None
+            and getattr(app, "node", None) == "node0"):
+        os.kill(os.getpid(), signal.SIGKILL)
+    v = sum(i.read() for i in inputs) if inputs else 1
+    for o in outputs:
+        o.write(v * 2)
+
+
+def kill_lg(width=6):
+    g = GraphBuilder("rz_kill")
+    g.data("src", volume=10)
+    with g.scatter("sc", width):
+        g.component("w", app="rz_kill_node0", time=1.0)
+        g.data("mid", volume=10)
+        g.component("w2", app="rz_kill_node0", time=1.0)
+        g.data("mid2", volume=10)
+    with g.gather("ga", width):
+        g.component("r", app="rz_sum", time=1.0)
+    g.data("out")
+    g.chain("src", "w", "mid", "w2", "mid2", "r", "out")
+    return g.graph()
+
+
+class TestProcessSIGKILLRecovery:
+    """A worker process dying of a real SIGKILL must recover through the
+    same lineage machinery as scripted node failures, with final values
+    equal to the fault-free object-engine oracle."""
+
+    def test_sigkill_mid_wave_matches_fault_free_oracle(self):
+        with Pipeline(num_nodes=2, algorithm="none") as p:
+            rep = p.run(kill_lg(), inputs={"src": 3})
+            assert rep.ok, rep.errors
+            oracle = {u: d.read() for u, d in p.session.drops.items()
+                      if d.state is DropState.COMPLETED
+                      and getattr(d, "payload", None) is not None
+                      and d.payload.exists()}
+            status_o = p.session.status()
+        with Pipeline(num_nodes=2, algorithm="none", execution="compiled",
+                      workers="process",
+                      resilience=ResilienceConfig()) as p:
+            rep = p.run(kill_lg(), timeout=120, inputs={"src": 3})
+            assert rep.ok, rep.errors
+            assert rep.recoveries >= 1, "SIGKILL never triggered recovery"
+            assert rep.recovered_drops > 0
+            assert "node0" in p.fault_manager.stats.failed_nodes
+            s = p.session
+            assert s.status() == status_o
+            for u, v in oracle.items():
+                assert s.read(u) == v, u
 
 
 # ---------------------------------------------------------------------------
